@@ -1,0 +1,50 @@
+"""Shared benchmark helpers: hardware, plans, CSV emission."""
+from __future__ import annotations
+
+import functools
+import sys
+import time
+
+from repro.configs.paper_suite import WORKLOAD_CLASSES, paper_models
+from repro.core import cost_model as cm
+from repro.serving import build_paper_plans, poisson_workload
+
+HW = cm.CPU_3990X
+N_QUERIES = 400
+SEED = 1
+
+rows: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    rows.append(line)
+    print(line, flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+@functools.lru_cache(maxsize=None)
+def plans_for(*models: str):
+    return build_paper_plans(list(models), HW)
+
+
+def class_workload(cls: str, qps: float, n: int = N_QUERIES,
+                   seed: int = SEED):
+    pm = paper_models()
+    models = list(WORKLOAD_CLASSES[cls])
+    weights = [1.0 / pm[m].qos_ms for m in models]
+    return models, poisson_workload(models, qps, n, seed=seed,
+                                    weights=weights)
+
+
+QPS_GRIDS = {
+    "light": (100, 200, 300, 450, 600),
+    "medium": (80, 120, 160, 200, 240),
+    "heavy": (3, 5, 8, 11, 14),
+    "mix": (60, 100, 140, 180, 220),
+}

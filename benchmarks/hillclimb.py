@@ -1,0 +1,122 @@
+"""Perf hillclimbing driver — hypothesis -> change -> measure -> validate.
+
+Measures a cell's roofline terms under named variants (sharding rules,
+config tweaks, train knobs) and appends records to
+results/hillclimb.jsonl.  The §Perf log in EXPERIMENTS.md is written from
+these records.
+
+    PYTHONPATH=src:. python benchmarks/hillclimb.py --cell gemma-decode \
+        --variant baseline seqshard
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config, get_shape
+from repro.dist import sharding as shd
+from repro.launch.mesh import make_production_mesh
+
+import benchmarks.roofline as R
+
+RESULTS = R.RESULTS
+
+
+def measure_variant(arch: str, shape_name: str, *, rules=None, cfg=None,
+                    accum: int | None = None, label: str = "baseline"):
+    """Roofline terms for one cell variant (d1/d2 extrapolated)."""
+    base_cfg = cfg or get_config(arch)
+    shape = get_shape(shape_name)
+    from repro.models.model import make_plan
+    plan = make_plan(base_cfg)
+    mesh = make_production_mesh()
+    eff_accum = accum if accum is not None else (
+        R.TRAIN_KNOBS[arch][1] if shape.mode == "train" else 1)
+    mb_shape = (dataclasses.replace(
+        shape, global_batch=max(shape.global_batch // eff_accum, 1))
+        if eff_accum > 1 else shape)
+
+    def meas(groups):
+        return R._measure(arch, shape_name, R._depth_cfg(base_cfg, groups),
+                          mesh, mb_shape, rules=rules)
+
+    d1, d2 = meas(1), meas(2)
+    totals = {k: (d1[k] + (plan.n_groups - 1) * (d2[k] - d1[k])) * eff_accum
+              for k in ("flops", "bytes", "link")}
+    rec = {
+        "cell": f"{arch}x{shape_name}", "variant": label,
+        "accum": eff_accum,
+        "compute_s": totals["flops"] / R.PEAK_FLOPS,
+        "memory_s": totals["bytes"] / R.HBM_BW,
+        "collective_s": totals["link"] / R.LINK_BW,
+    }
+    rec["bound_s"] = max(rec["compute_s"], rec["memory_s"],
+                         rec["collective_s"])
+    rec["dominant"] = max(
+        ("compute", rec["compute_s"]), ("memory", rec["memory_s"]),
+        ("collective", rec["collective_s"]), key=lambda kv: kv[1])[0]
+    with open(os.path.join(RESULTS, "hillclimb.jsonl"), "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"[hillclimb] {rec['cell']} {label}: "
+          f"comp={rec['compute_s']*1e3:.2f}ms mem={rec['memory_s']*1e3:.2f}ms "
+          f"coll={rec['collective_s']*1e3:.2f}ms dom={rec['dominant']}",
+          flush=True)
+    return rec
+
+
+# named variants --------------------------------------------------------------
+def gemma_decode(variants):
+    arch, shp = "gemma-2b", "decode_32k"
+    if "baseline" in variants:
+        measure_variant(arch, shp, label="baseline")
+    if "seqshard" in variants:
+        # context-parallel decode: shard the KV-cache sequence axis over
+        # the (otherwise idle, kv_heads=1) model axis
+        rules = shd.make_rules("serve", False, seq_parallel=True)
+        measure_variant(arch, shp, rules=rules, label="seqshard-kv")
+
+
+def arctic_train(variants):
+    arch, shp = "arctic-480b", "train_4k"
+    if "baseline" in variants:
+        measure_variant(arch, shp, label="baseline(accum16)")
+    for v in variants:
+        if v.startswith("accum"):
+            measure_variant(arch, shp, accum=int(v[5:]),
+                            label=f"accum{int(v[5:])}")
+
+
+def deepseek_decode(variants):
+    arch, shp = "deepseek-v2-lite-16b", "decode_32k"
+    cfg = get_config(arch)
+    if "baseline" in variants:
+        measure_variant(arch, shp, label="baseline(plain-mla)")
+    if "absorb" in variants:
+        cfg2 = dataclasses.replace(
+            cfg, mla=dataclasses.replace(cfg.mla, absorb=True))
+        measure_variant(arch, shp, cfg=cfg2, label="mla-absorb")
+    if "absorb-seqshard" in variants:
+        cfg2 = dataclasses.replace(
+            cfg, mla=dataclasses.replace(cfg.mla, absorb=True))
+        rules = shd.make_rules("serve", False, seq_parallel=True)
+        measure_variant(arch, shp, cfg=cfg2, rules=rules,
+                        label="mla-absorb+seqshard")
+
+
+CELLS = {"gemma-decode": gemma_decode, "arctic-train": arctic_train,
+         "deepseek-decode": deepseek_decode}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--variant", nargs="+", default=["baseline"])
+    args = ap.parse_args()
+    CELLS[args.cell](args.variant)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Render the roofline/dry-run tables from results/*.jsonl (no compiles).
+
+    PYTHONPATH=src:. python -m benchmarks.report
+"""
+import json
+import os
+
+RESULTS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "results"))
+
+
+def _load(name):
+    path = os.path.join(RESULTS, name)
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path) if l.strip()]
+
+
+def roofline_table():
+    recs = [r for r in _load("roofline_cells.jsonl") if "error" not in r]
+    if not recs:
+        print("# no roofline records yet")
+        return
+    print("\n## Roofline table (16x16 mesh, per-device seconds)")
+    print(f"{'arch':22s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+          f"{'mem_flr':>9s} {'coll_s':>9s} {'dom':>10s} {'frac':>5s} "
+          f"{'useful':>6s}")
+    for r in recs:
+        print(f"{r['arch']:22s} {r['shape']:12s} "
+              f"{r['compute_s']:9.3f} {r['memory_s']:9.3f} "
+              f"{r['memory_floor_s']:9.3f} {r['collective_s']:9.3f} "
+              f"{r['dominant']:>10s} {r['roofline_fraction']:5.2f} "
+              f"{r['useful_flops_ratio']:6.2f}")
+    doms = {}
+    for r in recs:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"# bottleneck distribution: {doms} over {len(recs)} cells")
+
+
+def dryrun_summary():
+    for mesh in ("16x16", "2x16x16", "serve_v2"):
+        recs = _load(f"dryrun_{mesh}.jsonl")
+        if not recs:
+            continue
+        ok = [r for r in recs if r["status"] == "ok"]
+        sk = [r for r in recs if r["status"] == "skipped"]
+        er = [r for r in recs if r["status"] == "error"]
+        print(f"\n## Dry-run @ {mesh}: {len(ok)} ok / {len(sk)} skipped / "
+              f"{len(er)} errors")
+        if ok:
+            worst = max(ok, key=lambda r: r["memory"].get(
+                "argument_size_in_bytes", 0))
+            print(f"#   largest args/dev: {worst['arch']} x {worst['shape']}"
+                  f" = {worst['memory']['argument_size_in_bytes']/2**30:.2f}"
+                  f" GiB")
+            colls = sum(sum(r["collectives"]["counts"].values()) for r in ok)
+            print(f"#   total collective ops across cells: {colls}")
+
+
+def hillclimb_log():
+    recs = _load("hillclimb.jsonl")
+    if not recs:
+        return
+    print("\n## Hillclimb measurements")
+    for r in recs:
+        print(f"{r['cell']:38s} {r['variant']:22s} "
+              f"comp={r['compute_s']*1e3:9.2f}ms "
+              f"mem={r['memory_s']*1e3:9.2f}ms "
+              f"coll={r['collective_s']*1e3:9.2f}ms dom={r['dominant']}")
+
+
+def main():
+    dryrun_summary()
+    roofline_table()
+    hillclimb_log()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Roofline analysis per (arch x shape) cell — deliverable (g).
+
+Per-device cost terms come from compiled artifacts, but XLA's
+cost_analysis does NOT multiply while-loop bodies by trip count (scanned
+layer stacks and grad-accumulation loops report one iteration).  We
+therefore lower each cell twice at reduced depth — d1 = one scan group,
+d2 = two groups — on the production mesh with the production shardings,
+and extrapolate linearly:
+
+    total(X) = X(d1) + (n_groups - 1) * (X(d2) - X(d1)),   then x accum
+
+for X in {flops, bytes, link_bytes}.  All layers in a group are identical,
+so the per-group delta is exact; the d1 base carries embed/unembed/optimizer
+costs.  Records land in results/roofline_cells.json.
+
+Terms (v5e constants from the assignment):
+    compute_s    = flops_dev   / 197e12
+    memory_s     = bytes_dev   / 819e9
+    collective_s = link_bytes_dev / 50e9
+    MODEL_FLOPS  = 6*N_active*D (train) or 2*N_active*D (inference)
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import get_config, get_shape, all_cells
+from repro.core.profiles import model_flops
+from repro.launch import hlo_stats
+from repro.launch.dryrun import TRAIN_KNOBS, build_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, param_count
+from repro.models.model import make_plan
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "results"))
+
+
+def _depth_cfg(cfg, groups: int):
+    plan = make_plan(cfg)
+    per = len(plan.scan_kinds)
+    layers = groups * per + len(plan.prologue)
+    return dataclasses.replace(cfg, name=f"{cfg.name}-d{groups}",
+                               num_layers=layers)
+
+
+def _measure(arch, shape_name, cfg, mesh, shape=None, rules=None):
+    from repro.models import layers as L
+    fn, args_abs, in_sh, donate, _ = build_cell(
+        arch, shape_name, mesh, False, cfg=cfg, accum_override=1,
+        shape=shape, rules=rules)
+    L.ANALYSIS_UNROLL = True
+    try:
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               donate_argnums=donate
+                               ).lower(*args_abs).compile()
+            hlo = compiled.as_text()
+    finally:
+        L.ANALYSIS_UNROLL = False
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    coll = hlo_stats.parse_collectives(hlo)
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "link": float(coll.link_bytes)}
+
+
+def n_active_params(cfg) -> int:
+    """Active params per token (MoE counts top-k + shared + dense only)."""
+    total = param_count(build_model(cfg).param_specs())
+    if cfg.moe is None:
+        return total
+    moe = cfg.moe
+    expert_params = 3 * cfg.d_model * moe.expert_d_ff
+    inactive = (moe.num_experts - moe.top_k) * expert_params \
+        * (cfg.num_layers - cfg.first_dense_layers)
+    return total - inactive
+
+
+def roofline_cell(arch: str, shape_name: str, mesh) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    plan = make_plan(cfg)
+    # measure at the true microbatch size (grad-accum repeats the whole
+    # fwd/bwd — weights re-stream and re-gather per microbatch), scale back
+    accum = TRAIN_KNOBS[arch][1] if shape.mode == "train" else 1
+    mb_shape = (dataclasses.replace(shape,
+                                    global_batch=max(shape.global_batch
+                                                     // accum, 1))
+                if accum > 1 else shape)
+    d1 = _measure(arch, shape_name, _depth_cfg(cfg, 1), mesh, mb_shape)
+    d2 = _measure(arch, shape_name, _depth_cfg(cfg, 2), mesh, mb_shape)
+    totals = {}
+    for k in ("flops", "bytes", "link"):
+        per_group = d2[k] - d1[k]
+        totals[k] = (d1[k] + (plan.n_groups - 1) * per_group) * accum
+    compute_s = totals["flops"] / PEAK_FLOPS
+    memory_s = totals["bytes"] / HBM_BW
+    coll_s = totals["link"] / LINK_BW
+
+    # Analytic compulsory-traffic floor: weights stream once per microbatch
+    # (x accum), KV/state caches read+write once, activations ~2 x residual
+    # stream per layer.  The HLO byte count from the CPU backend overcounts
+    # (different fusion decisions than TPU), so we report both and use the
+    # geometric mean of (floor, HLO) for bottleneck calls.
+    model = build_model(cfg)
+    from repro.models.params import param_bytes
+    wb = param_bytes(model.param_specs()) / mesh.size
+    tokens = (shape.global_batch if shape.mode == "decode"
+              else shape.global_batch * shape.seq_len)
+    act_b = 2 * 2 * tokens * cfg.d_model * max(cfg.num_layers, 1) \
+        / mesh.size
+    cache_b = 0.0
+    if shape.mode == "decode":
+        cache_b = 2 * param_bytes(
+            model.cache_specs(shape.global_batch, shape.seq_len)) / mesh.size
+    bytes_floor = wb * accum + act_b * accum + cache_b
+    memory_floor_s = bytes_floor / HBM_BW
+    memory_est_s = (memory_s * memory_floor_s) ** 0.5
+
+    dominant = max(("compute", compute_s), ("memory", memory_est_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+    n_act = n_active_params(cfg)
+    mult = 6 if shape.mode == "train" else 2
+    mflops_dev = mult * n_act * tokens / mesh.size
+    hlo_total = max(totals["flops"], 1.0)
+    bound = max(compute_s, memory_est_s, coll_s)
+    return {
+        "arch": arch, "shape": shape_name, "mode": shape.mode,
+        "n_devices": mesh.size, "accum": accum,
+        "flops_dev": totals["flops"], "bytes_dev": totals["bytes"],
+        "bytes_floor_dev": bytes_floor,
+        "link_bytes_dev": totals["link"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_floor_s": memory_floor_s, "memory_est_s": memory_est_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "model_flops_dev": mflops_dev,
+        "useful_flops_ratio": mflops_dev / hlo_total,
+        "bound_s": bound,
+        "roofline_fraction": compute_s / bound,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--out", default=os.path.join(RESULTS,
+                                                  "roofline_cells.jsonl"))
+    args = ap.parse_args()
+    mesh = make_production_mesh(multi_pod=False)
+    os.makedirs(RESULTS, exist_ok=True)
+    for arch, shape_name, ok, _ in all_cells(include_skipped=False):
+        if args.arch != "all" and arch != args.arch:
+            continue
+        if args.shape != "all" and shape_name != args.shape:
+            continue
+        try:
+            rec = roofline_cell(arch, shape_name, mesh)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape_name,
+                   "error": f"{type(e).__name__}: {e}"}
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        if "error" in rec:
+            print(f"[roofline] {arch} x {shape_name}: ERROR {rec['error']}",
+                  flush=True)
+        else:
+            print(f"[roofline] {arch} x {shape_name}: "
+                  f"comp={rec['compute_s']*1e3:.2f}ms "
+                  f"mem={rec['memory_s']*1e3:.2f}ms "
+                  f"coll={rec['collective_s']*1e3:.2f}ms "
+                  f"dom={rec['dominant']} "
+                  f"frac={rec['roofline_fraction']:.2f} "
+                  f"useful={rec['useful_flops_ratio']:.2f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

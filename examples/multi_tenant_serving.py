@@ -1,0 +1,53 @@
+"""Flagship example: multi-tenant serving with VELTAIR vs baselines.
+
+    PYTHONPATH=src python examples/multi_tenant_serving.py
+
+Compiles multi-version plans for the paper's MLPerf mix, then serves a
+Poisson query stream under every scheduling policy and prints the QoS
+table (Fig. 12-style).  All scheduling decisions run the production
+repro.core code; time advancement is simulated (this container has one
+CPU device — see DESIGN.md §2, measurement substrate).
+"""
+import time
+
+from repro.configs.paper_suite import WORKLOAD_CLASSES, paper_models
+from repro.core import cost_model as cm
+from repro.core.scheduler import (LayerWisePolicy, ModelWisePolicy,
+                                  PremaPolicy, VeltairPolicy)
+from repro.serving import Simulator, build_paper_plans, poisson_workload
+
+
+def main():
+    hw = cm.CPU_3990X
+    pm = paper_models()
+    models = list(WORKLOAD_CLASSES["mix"])
+    print(f"compiling multi-version plans for {len(models)} tenants ...")
+    t0 = time.time()
+    plans = build_paper_plans(models, hw)
+    print(f"  done in {time.time()-t0:.1f}s; per-model versions: "
+          + ", ".join(
+          f"{n}={sum(len(v.versions) for v in p.version_sets)}"
+          for n, p in plans.items()))
+
+    weights = [1.0 / pm[m].qos_ms for m in models]
+    policies = [
+        ("model-wise FCFS", lambda: ModelWisePolicy(hw)),
+        ("layer-wise (Planaria-ported)", lambda: LayerWisePolicy(hw)),
+        ("PREMA (temporal)", lambda: PremaPolicy(hw)),
+        ("VELTAIR-AS", lambda: VeltairPolicy(hw, adaptive_compile=False)),
+        ("VELTAIR-AC", lambda: VeltairPolicy(hw, adaptive_schedule=False)),
+        ("VELTAIR-FULL", lambda: VeltairPolicy(hw)),
+    ]
+    print(f"\n{'policy':32s} " + " ".join(f"qps={q:<5d}" for q in (60, 140,
+                                                                   220)))
+    for name, pf in policies:
+        rates = []
+        for qps in (60, 140, 220):
+            wl = poisson_workload(models, qps, 400, seed=1, weights=weights)
+            m = Simulator(hw, plans, pf()).run(wl)
+            rates.append(m.qos_rate)
+        print(f"{name:32s} " + " ".join(f"{r:.2f}    " for r in rates))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Train a reduced LM for a few hundred steps (WSD schedule, checkpoints).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import tempfile
+
+from repro.configs import get_reduced_config
+from repro.data import DataConfig
+from repro.models import build_model, param_count
+from repro.training import OptimizerConfig, TrainConfig
+from repro.training.train_loop import LoopConfig, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="minicpm-2b")
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    model = build_model(cfg)
+    print(f"training {cfg.name}: {param_count(model.param_specs()):,} params")
+    tc = TrainConfig(
+        optimizer=OptimizerConfig(lr=2e-3, schedule="wsd",
+                                  warmup_steps=args.steps // 10,
+                                  total_steps=args.steps),
+        accum_steps=2)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        out = train_loop(model, tc, dc,
+                         LoopConfig(total_steps=args.steps,
+                                    ckpt_dir=ckpt_dir, ckpt_every=50,
+                                    log_every=20))
+    first, last = out["losses"][0][1], out["losses"][-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps")
+
+
+if __name__ == "__main__":
+    main()

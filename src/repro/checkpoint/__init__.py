@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.elastic import elastic_restore, reshard_plan
+
+__all__ = ["Checkpointer", "elastic_restore", "reshard_plan"]

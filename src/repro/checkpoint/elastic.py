@@ -1,0 +1,74 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+The checkpoint format is topology-free (host-gathered leaves), so elastic
+restore is just ``Checkpointer.restore(sharding_tree=new_mesh_shardings)``.
+This module adds the policy layer a cluster controller needs:
+
+  * ``reshard_plan`` — given old/new meshes, report per-leaf shard shape
+    changes and total re-layout bytes (the data the restore moves);
+  * ``elastic_restore`` — restore the latest checkpoint onto the new mesh,
+    validating divisibility (e.g. batch axis vs new data-axis size).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclasses.dataclass
+class ReshardReport:
+    n_leaves: int
+    moved_bytes: int
+    incompatible: list[str]
+
+
+def _shards_of(spec: P, mesh: Mesh) -> int:
+    n = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for ax in ((entry,) if isinstance(entry, str) else entry):
+            n *= mesh.shape[ax]
+    return n
+
+
+def reshard_plan(pspec_tree, old_mesh: Mesh, new_mesh: Mesh,
+                 shape_tree) -> ReshardReport:
+    moved = 0
+    bad: list[str] = []
+    specs = jax.tree_util.tree_leaves(
+        pspec_tree, is_leaf=lambda x: isinstance(x, P))
+    shapes = jax.tree_util.tree_leaves(
+        shape_tree, is_leaf=lambda x: isinstance(x, tuple))
+    for i, (spec, shape) in enumerate(zip(specs, shapes)):
+        old_n = _shards_of(spec, old_mesh)
+        new_n = _shards_of(spec, new_mesh)
+        size = int(np.prod(shape)) * 2
+        if old_n != new_n:
+            moved += size
+        # divisibility on the sharded dims
+        for dim, entry in zip(shape, spec):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else entry
+            factor = 1
+            for ax in axes:
+                factor *= new_mesh.shape[ax]
+            if dim % factor:
+                bad.append(f"leaf{i}: dim {dim} % {factor} != 0")
+    return ReshardReport(n_leaves=len(specs), moved_bytes=moved,
+                         incompatible=bad)
+
+
+def elastic_restore(ckpt: Checkpointer, like_tree, pspec_tree,
+                    new_mesh: Mesh, step: int | None = None):
+    """Restore the latest (or given) step onto ``new_mesh``."""
+    shardings = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(new_mesh, sp), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    return ckpt.restore(step, like_tree, sharding_tree=shardings)

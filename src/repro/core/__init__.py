@@ -1,0 +1,23 @@
+from repro.core.cost_model import (CPU_3990X, TPU_V5E_POD, CodeVersion,
+                                   GemmLayer, HardwareSpec, Interference,
+                                   latency, units_required)
+from repro.core.multiversion import VersionSet, compile_layer, compile_model
+from repro.core.layer_block import (LayerBlock, ModelPlan, form_blocks,
+                                    make_model_plan, next_block)
+from repro.core.scheduler import (ChunkPlan, FixedBlockPolicy,
+                                  LayerWisePolicy, ModelWisePolicy,
+                                  Policy, PremaPolicy, TaskState,
+                                  VeltairPolicy)
+from repro.core.allocator import UnitPool
+from repro.core.interference import (LinearProxy, calibrate_proxy,
+                                     pca_variance, pressure_on)
+
+__all__ = [
+    "CPU_3990X", "TPU_V5E_POD", "CodeVersion", "GemmLayer", "HardwareSpec",
+    "Interference", "latency", "units_required", "VersionSet",
+    "compile_layer", "compile_model", "LayerBlock", "ModelPlan",
+    "form_blocks", "make_model_plan", "next_block", "ChunkPlan",
+    "FixedBlockPolicy", "LayerWisePolicy", "ModelWisePolicy", "Policy",
+    "PremaPolicy", "TaskState", "VeltairPolicy", "UnitPool", "LinearProxy",
+    "calibrate_proxy", "pca_variance", "pressure_on",
+]

@@ -1,0 +1,40 @@
+"""Unit (core/chip) pool with conflict accounting."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class UnitPool:
+    total: int
+    free: int = -1
+    conflicts: int = 0
+    requests: int = 0
+    peak_used: int = 0
+
+    def __post_init__(self):
+        if self.free < 0:
+            self.free = self.total
+
+    @property
+    def used(self) -> int:
+        return self.total - self.free
+
+    def try_alloc(self, n: int) -> int:
+        """Allocate up to n units; returns the number granted (0 if none
+        free).  A grant below the request counts as a scheduling conflict."""
+        self.requests += 1
+        grant = min(n, self.free)
+        if grant < n:
+            self.conflicts += 1
+        self.free -= grant
+        self.peak_used = max(self.peak_used, self.used)
+        return grant
+
+    def release(self, n: int) -> None:
+        self.free += n
+        assert self.free <= self.total, "double free"
+
+    @property
+    def conflict_rate(self) -> float:
+        return self.conflicts / self.requests if self.requests else 0.0

@@ -1,0 +1,77 @@
+"""QoS targets, satisfaction tracking and serving metrics."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    tenant: str
+    arrival: float
+    finish: float
+    qos_s: float
+    units_time: float = 0.0          # integral of units x time (efficiency)
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def satisfied(self) -> bool:
+        return self.latency <= self.qos_s
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    qps_offered: float
+    qos_rate: float                 # fraction of queries meeting QoS
+    avg_latency_s: float
+    p99_latency_s: float
+    conflict_rate: float
+    avg_units: float                # mean units used by running queries
+    unit_efficiency: float          # useful busy-time / allocated unit-time
+
+
+def summarize(records: list[QueryRecord], qps_offered: float,
+              conflict_rate: float, busy_unit_time: float,
+              alloc_unit_time: float) -> ServingMetrics:
+    if not records:
+        return ServingMetrics(qps_offered, 0.0, float("inf"), float("inf"),
+                              conflict_rate, 0.0, 0.0)
+    lats = np.array([r.latency for r in records])
+    sat = np.mean([r.satisfied for r in records])
+    span = max(max(r.finish for r in records)
+               - min(r.arrival for r in records), 1e-9)
+    avg_units = alloc_unit_time / span
+    eff = busy_unit_time / alloc_unit_time if alloc_unit_time > 0 else 0.0
+    return ServingMetrics(
+        qps_offered=qps_offered,
+        qos_rate=float(sat),
+        avg_latency_s=float(lats.mean()),
+        p99_latency_s=float(np.percentile(lats, 99)),
+        conflict_rate=conflict_rate,
+        avg_units=float(avg_units),
+        unit_efficiency=float(eff),
+    )
+
+
+def qps_at_qos(sweep: list[tuple[float, ServingMetrics]],
+               target: float = 0.95) -> float:
+    """Max offered QPS whose QoS satisfaction rate stays >= target
+    (MLPerf-server style metric), linearly interpolated between grid
+    points (rate -> 1.0 as qps -> 0)."""
+    pts = sorted((q, m.qos_rate) for q, m in sweep)
+    prev_q, prev_r = 0.0, 1.0
+    best = 0.0
+    for q, r in pts:
+        if r >= target:
+            best = q
+            prev_q, prev_r = q, r
+            continue
+        if prev_r > target >= r and prev_r > r:
+            best = max(best, prev_q + (q - prev_q)
+                       * (prev_r - target) / (prev_r - r))
+        prev_q, prev_r = q, r
+    return best

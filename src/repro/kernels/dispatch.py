@@ -1,0 +1,90 @@
+"""Kernel dispatch: route hot-spot ops to XLA reference or Pallas kernels.
+
+Modes:
+  "xla"        pure-jnp reference path (default; used by the dry-run so
+               cost_analysis sees clean XLA HLO)
+  "interpret"  Pallas kernels in interpret mode (CPU correctness testing)
+  "pallas"     compiled Pallas kernels (real TPU target)
+
+The mode is process-global (set once at launch).  ``get_matmul`` always
+returns a callable; ``get_attention``/``get_ssd`` return None in "xla" mode so
+callers fall back to their inline reference math.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+_MODE = "xla"
+_VALID = ("xla", "interpret", "pallas")
+
+# Tile overrides installed by the adaptive-compilation layer (core.multiversion):
+# maps op name -> dict of tiling kwargs for the Pallas kernels.
+_TILE_OVERRIDES: dict[str, dict] = {}
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    if mode not in _VALID:
+        raise ValueError(f"kernel mode {mode!r} not in {_VALID}")
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+def set_tile_overrides(op: str, **kwargs) -> None:
+    _TILE_OVERRIDES[op] = dict(kwargs)
+
+
+def clear_tile_overrides() -> None:
+    _TILE_OVERRIDES.clear()
+
+
+def tile_overrides(op: str) -> dict:
+    return dict(_TILE_OVERRIDES.get(op, {}))
+
+
+def _ref_matmul(x, w):
+    return jnp.einsum("...m,mf->...f", x, w)
+
+
+def get_matmul() -> Callable:
+    if _MODE == "xla":
+        return _ref_matmul
+    from repro.kernels import ops
+    interpret = _MODE == "interpret"
+
+    def mm(x, w):
+        return ops.block_matmul(x, w, interpret=interpret,
+                                **tile_overrides("matmul"))
+    return mm
+
+
+def get_attention() -> Callable | None:
+    if _MODE == "xla":
+        return None
+    from repro.kernels import ops
+    interpret = _MODE == "interpret"
+
+    def attn(q, k, v, *, q_positions, kv_valid_len, window, softcap):
+        return ops.flash_attention(
+            q, k, v, q_positions=q_positions, kv_valid_len=kv_valid_len,
+            window=window, softcap=softcap, interpret=interpret,
+            **tile_overrides("attention"))
+    return attn
+
+
+def get_ssd() -> Callable | None:
+    if _MODE == "xla":
+        return None
+    from repro.kernels import ops
+    interpret = _MODE == "interpret"
+
+    def ssd(x, dt, a, b, c, *, chunk_size, initial_state=None):
+        return ops.ssd_scan(x, dt, a, b, c, chunk_size=chunk_size,
+                            initial_state=initial_state, interpret=interpret,
+                            **tile_overrides("ssd"))
+    return ssd

@@ -1,0 +1,129 @@
+"""Causal GQA flash attention Pallas kernel (online softmax).
+
+Grid: (B, H, Sq/bq, T/bkv) with the KV axis innermost; running max /
+denominator / fp32 output accumulator live in VMEM scratch and persist
+across KV steps (TPU grid iteration is sequential).  Supports:
+
+  * GQA/MQA: kv head = query head // (H/K)  (via BlockSpec index_map)
+  * causal masking with a query position offset (decode: offset = t)
+  * sliding-window masking (starcoder2 / recurrentgemma local attention)
+  * kv_valid_len: cache slots beyond the valid length are masked
+  * logit softcap (tanh)
+
+The (bq, bkv) block shape is a locality/parallelism knob exposed to the
+adaptive compiler alongside the matmul tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _flash_kernel(scalars_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  kv_steps: int, bq: int, bkv: int, scale: float,
+                  window: int | None, softcap: float | None):
+    offset = scalars_ref[0]
+    kv_valid = scalars_ref[1]
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale       # (bq, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (bkv, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bkv)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = (k_pos <= q_pos) & (k_pos < kv_valid)
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                      # (bq,)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(ki == kv_steps - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bkv", "window", "softcap", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    offset, kv_valid_len, bq: int = 512, bkv: int = 512,
+                    window: int | None = None, softcap: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,S,H,D); k/v (B,T,K,D); query i has absolute position offset+i.
+
+    offset / kv_valid_len may be traced int32 scalars (scalar-prefetched).
+    """
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    bq = min(bq, s)
+    bkv = min(bkv, t)
+    # pad S and T to block multiples (extra kv masked via kv_valid_len logic;
+    # extra q rows discarded after the call)
+    sp = ((s + bq - 1) // bq) * bq
+    tp = ((t + bkv - 1) // bkv) * bkv
+    if sp != s:
+        q = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    if tp != t:
+        k = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    kv_steps = tp // bkv
+    scalars = jnp.stack([jnp.asarray(offset, jnp.int32),
+                         jnp.minimum(jnp.asarray(kv_valid_len, jnp.int32), t)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, sp // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d),
+                         lambda bi, hi, qi, ki, sc: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, bkv, 1, d),
+                         lambda bi, hi, qi, ki, sc: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, bkv, 1, d),
+                         lambda bi, hi, qi, ki, sc: (bi, ki, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d),
+                               lambda bi, hi, qi, ki, sc: (bi, qi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, kv_steps=kv_steps, bq=bq, bkv=bkv,
+                          scale=d ** -0.5, window=window, softcap=softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, sp, h, d), q.dtype),
+        interpret=interpret,
+    )(scalars, q, k, v)
+    return out[:, :s]

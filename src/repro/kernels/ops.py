@@ -1,0 +1,44 @@
+"""Jit'd wrappers around the Pallas kernels (the dispatch contract).
+
+These adapt model-side calling conventions (leading batch dims, per-token
+position arrays) to the kernels' layouts, and are what
+``repro.kernels.dispatch`` routes to in "interpret"/"pallas" modes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_matmul as _bm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def block_matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bk: int = 512,
+                 bn: int = 256, interpret: bool = False) -> jax.Array:
+    """x (..., K) @ w (K, N) with explicit VMEM tiling."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = _bm.block_matmul_2d(x2, w, bm=bm, bk=bk, bn=bn,
+                              interpret=interpret)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_positions: jax.Array, kv_valid_len, window=None,
+                    softcap=None, bq: int = 512, bkv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """Adapter: models pass q_positions (B,S); the kernel takes a scalar
+    offset with query i at offset+i (all our call sites use contiguous
+    positions — prefill offset 0, decode offset t)."""
+    offset = q_positions.reshape(-1)[0] - 0  # first query's absolute position
+    return _fa.flash_attention(q, k, v, offset=offset,
+                               kv_valid_len=kv_valid_len, bq=bq, bkv=bkv,
+                               window=window, softcap=softcap,
+                               interpret=interpret)
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk_size: int = 256, initial_state=None,
+             interpret: bool = False):
+    return _ssd.ssd_scan(x, dt, a, b, c, chunk_size=chunk_size,
+                         initial_state=initial_state, interpret=interpret)

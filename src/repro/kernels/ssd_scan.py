@@ -1,0 +1,113 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel.
+
+Grid: (B, H, L/Q) with the chunk axis innermost.  The running SSD state
+(P, N) lives in VMEM scratch and carries across chunk steps — TPU grid
+iteration is sequential, so the inter-chunk recurrence needs no extra pass.
+Per chunk the work is three small MXU matmuls ((Q,N)x(N,Q), (Q,Q)x(Q,P),
+(N,Q)x(Q,P)): the "duality" that makes SSDs MXU-friendly.
+
+The chunk size Q trades VMEM locality (larger intra-chunk matmuls, fewer
+state round-trips) against parallel grid width — the SSD variant knob used
+by the adaptive compiler for the mamba2/recurrentgemma cells.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+                y_ref, state_ref, h_scratch, *, n_chunks: int, q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scratch[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    a = a_ref[0]                                     # scalar decay rate (<0)
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+
+    da = dt * a                                      # (Q,) log-decay
+    seg = jnp.cumsum(da)                             # inclusive
+    total = seg[-1]
+
+    # intra-chunk (attention-like masked matmul)
+    i_pos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    j_pos = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.exp(seg[:, None] - seg[None, :])
+    gate = jnp.where(j_pos <= i_pos, decay, 0.0)
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)   # (Q,Q)
+    m_att = cb * gate * dt[None, :]
+    y = jnp.dot(m_att, x, preferred_element_type=jnp.float32)    # (Q,P)
+
+    # inter-chunk: y += exp(seg_i) * C_i . h_in   (h (P,N))
+    h = h_scratch[...]
+    y += jnp.exp(seg)[:, None] * jnp.dot(
+        cm, h.T, preferred_element_type=jnp.float32)
+
+    # state update: h' = exp(total) h + X^T (w * B),  w_j = exp(total-seg_j)dt_j
+    w = jnp.exp(total - seg) * dt                    # (Q,)
+    h_scratch[...] = jnp.exp(total) * h + jnp.dot(
+        x.T, bm * w[:, None], preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _flush():
+        state_ref[0, 0] = h_scratch[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_size", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk_size: int = 256,
+             initial_state: jax.Array | None = None,
+             interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x (B,L,H,P); dt (B,L,H) fp32; a (H,) fp32; b/c (B,L,H,N).
+
+    -> (y (B,L,H,P), final_state (B,H,P,N) fp32).  L is padded to a chunk
+    multiple with dt=0 (exact: zero step contributes nothing, decay 1)."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk_size, l)
+    orig_l = l
+    if l % q:
+        pad = q - l % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = x.shape[1]
+    n_chunks = l // q
+    h0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=n_chunks, q=q),
+        grid=(bsz, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, q, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), a.astype(jnp.float32), b, c, h0)
+    return y[:, :orig_l], state

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init) — 512 host devices stand in for 2 pods x 256 chips.
+
+For each runnable cell this script:
+  1. builds the model + abstract (ShapeDtypeStruct) state/batch/caches —
+     no allocation, a 480B model lowers from specs;
+  2. jits the train_step / prefill / decode_step with explicit
+     in_shardings from the logical-axis rules (dist.sharding);
+  3. ``.lower().compile()`` on the production mesh, then records
+     memory_analysis(), cost_analysis(), and the collective statistics
+     parsed from the optimized HLO (launch.hlo_stats);
+  4. appends a JSON record to results/dryrun_<mesh>.jsonl —
+     EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline.py read
+     these records.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (SHAPES, ARCH_NAMES, get_config, get_shape,
+                           shape_applicable)
+from repro.dist import sharding as shd
+from repro.dist.state_sharding import train_state_specs
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.frontends import input_specs
+from repro.models.params import ParamSpec, abstract_params, map_axes
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_step import TrainConfig, cast_params, \
+    make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results")
+
+
+# Per-arch training knobs: (optimizer, accum_steps, accum_dtype).
+# accum keeps per-microbatch activations + fp32 logits inside HBM;
+# adafactor (+bf16 accumulation) is what fits the 405B/480B states on a
+# single pod (DESIGN.md §5, EXPERIMENTS.md §Dry-run).
+TRAIN_KNOBS: dict[str, tuple[str, int, str]] = {
+    "llama3-405b": ("adafactor", 16, "bfloat16"),
+    "arctic-480b": ("adafactor", 16, "bfloat16"),
+    "deepseek-v2-lite-16b": ("adamw", 4, "float32"),
+    "gemma-2b": ("adamw", 8, "float32"),
+    "minicpm-2b": ("adamw", 8, "float32"),
+    "qwen2-vl-2b": ("adamw", 8, "float32"),
+    "musicgen-large": ("adamw", 2, "float32"),
+    "starcoder2-3b": ("adamw", 4, "float32"),
+    "recurrentgemma-2b": ("adamw", 8, "float32"),
+    "mamba2-780m": ("adamw", 4, "float32"),
+}
+
+
+def train_config_for(arch: str) -> TrainConfig:
+    opt_name, accum, accum_dtype = TRAIN_KNOBS[arch]
+    return TrainConfig(
+        optimizer=OptimizerConfig(name=opt_name),
+        accum_steps=accum, remat="full", accum_dtype=accum_dtype)
+
+
+def _abstract(specs):
+    return abstract_params(specs)
+
+
+def _shardings(specs, rules_table, rules: shd.RuleSet, mesh):
+    pspecs = jax.tree_util.tree_map(
+        lambda s: shd.pspec_for(s.shape, s.axes, rules_table, mesh),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return shd.shardings_of(pspecs, mesh)
+
+
+def build_cell(arch: str, shape_name: str, mesh, multi_pod: bool,
+               cfg=None, accum_override: int | None = None,
+               shape=None, rules=None):
+    """-> (fn, args_abstract, in_shardings, donate, mode).
+
+    ``cfg``/``shape`` override the registered config (roofline lowers
+    depth-reduced variants at microbatch size for scan-extrapolation);
+    ``accum_override`` pins the microbatch count; ``rules`` overrides the
+    sharding rule set (perf hillclimbing sweeps variants)."""
+    cfg = cfg or get_config(arch)
+    shape = shape or get_shape(shape_name)
+    model = build_model(cfg)
+    mode = "train" if shape.mode == "train" else "serve"
+    rules = rules or shd.make_rules(mode, multi_pod)
+
+    in_specs = input_specs(cfg, shape)
+    batch_abs = _abstract(in_specs)
+    batch_sh = _shardings(in_specs, rules.acts, rules, mesh)
+
+    if shape.mode == "train":
+        tc = train_config_for(arch)
+        if accum_override is not None:
+            tc = dataclasses.replace(tc, accum_steps=accum_override)
+        sspecs = train_state_specs(tc.optimizer, model.param_specs())
+        state_abs = _abstract(sspecs)
+        state_sh = _shardings(sspecs, rules.params, rules, mesh)
+        step = make_train_step(model, tc)
+
+        def fn(state, batch):
+            with shd.use_rules(mesh, rules):
+                return step(state, batch)
+        return fn, (state_abs, batch_abs), (state_sh, batch_sh), (0,), rules
+
+    _ = shape_name
+    pspecs_tree = model.param_specs()
+    params_abs = _abstract(pspecs_tree)
+    params_sh = _shardings(pspecs_tree, rules.params, rules, mesh)
+    cache_specs = model.cache_specs(shape.global_batch, shape.seq_len)
+    cache_abs = _abstract(cache_specs)
+    cache_sh = _shardings(cache_specs, rules.acts, rules, mesh)
+
+    if shape.mode == "prefill":
+        def fn(params, batch, cache):
+            with shd.use_rules(mesh, rules):
+                return build_model(cfg).prefill(params, batch, cache)
+        return fn, (params_abs, batch_abs, cache_abs), \
+            (params_sh, batch_sh, cache_sh), (2,), rules
+
+    t_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    t_sh = shd.shardings_of(shd.P(), mesh) if False else None
+
+    def fn(params, batch, cache, t):
+        with shd.use_rules(mesh, rules):
+            return build_model(cfg).decode_step(params, batch, cache, t)
+    from jax.sharding import NamedSharding, PartitionSpec
+    scalar_sh = NamedSharding(mesh, PartitionSpec())
+    return fn, (params_abs, batch_abs, cache_abs, t_abs), \
+        (params_sh, batch_sh, cache_sh, scalar_sh), (2,), rules
+
+
+def _memory_stats(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for key in ("argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    "alias_size_in_bytes"):
+            if hasattr(ma, key):
+                out[key] = int(getattr(ma, key))
+    except Exception as e:  # backend may not support it
+        out["error"] = str(e)
+    return out
+
+
+def _cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)}
+    except Exception as e:
+        return {"error": str(e)}
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                keep_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "mode": shape.mode}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args_abs, in_sh, donate, rules = build_cell(
+            arch, shape_name, mesh, multi_pod)
+        with mesh:
+            jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+            lowered = jfn.lower(*args_abs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            hlo = compiled.as_text()
+        coll = hlo_stats.parse_collectives(hlo)
+        n_dev = mesh.size
+        rec.update(
+            status="ok",
+            n_devices=n_dev,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=_memory_stats(compiled),
+            cost=_cost_stats(compiled),
+            collectives={
+                "counts": coll.counts,
+                "payload_bytes": coll.payload_bytes,
+                "link_bytes_per_dev": coll.link_bytes,
+            },
+        )
+        if shape.mode == "train":
+            rec["train_knobs"] = dict(zip(
+                ("optimizer", "accum_steps", "accum_dtype"),
+                TRAIN_KNOBS[arch]))
+        if keep_hlo:
+            rec["hlo_lines"] = len(hlo.splitlines())
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    os.makedirs(os.path.abspath(RESULTS_DIR), exist_ok=True)
+    out_path = args.out or os.path.abspath(
+        os.path.join(RESULTS_DIR, f"dryrun_{mesh_tag}.jsonl"))
+
+    for arch in archs:
+        for shape_name in shapes:
+            rec = dryrun_cell(arch, shape_name, multi_pod=args.multi_pod)
+            line = json.dumps(rec)
+            with open(out_path, "a") as f:
+                f.write(line + "\n")
+            mem = rec.get("memory", {})
+            print(f"[dryrun] {arch} x {shape_name} @ {mesh_tag}: "
+                  f"{rec['status']}"
+                  + (f" (compile {rec.get('compile_s')}s, "
+                     f"args {mem.get('argument_size_in_bytes', 0)/2**30:.2f}"
+                     f" GiB/dev, temp "
+                     f"{mem.get('temp_size_in_bytes', 0)/2**30:.2f} GiB/dev)"
+                     if rec["status"] == "ok" else
+                     f" {rec.get('reason', rec.get('error', ''))}"),
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Parse collective-communication statistics out of compiled HLO text.
+
+cost_analysis() gives FLOPs and memory bytes but not collective traffic, so
+the roofline's third term comes from scanning the post-SPMD optimized HLO
+for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, taking each op's payload from its result shape and
+its group size from replica_groups, and converting to per-device link bytes
+with the standard ring-collective factors:
+
+    all-gather          (n-1)/n * result_bytes
+    all-reduce        2*(n-1)/n * result_bytes
+    reduce-scatter      (n-1)   * result_bytes     (operand = n * result)
+    all-to-all          (n-1)/n * result_bytes
+    collective-permute           result_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+# `%x = bf16[1,2]{...} all-reduce(` or `%x = (bf16[..], ..) all-gather-start(`
+_INST_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1)
+    return default
+
+
+def _link_bytes(op: str, result_bytes: int, n: int) -> float:
+    if op == "collective-permute":
+        return float(result_bytes)    # point-to-point, no group concept
+    if n <= 1:
+        return 0.0
+    if op == "all-gather":
+        return (n - 1) / n * result_bytes
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n * result_bytes
+    if op == "reduce-scatter":
+        return (n - 1) * result_bytes
+    if op == "all-to-all":
+        return (n - 1) / n * result_bytes
+    return float(result_bytes)          # collective-permute
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    payload_bytes: dict
+    link_bytes: float                   # per-device, summed over ops
+
+    def total_payload(self) -> float:
+        return sum(self.payload_bytes.values())
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1,
+                      ) -> CollectiveStats:
+    counts = {op: 0 for op in _OPS}
+    payload = {op: 0.0 for op in _OPS}
+    link = 0.0
+    for line in hlo_text.splitlines():
+        m = _INST_RE.search(line)
+        if not m:
+            continue
+        type_str, op, start = m.group(1), m.group(2), m.group(3)
+        rb = _shape_bytes(type_str)
+        if start:
+            # -start result tuples carry (operand, result) aliases; halve
+            rb = rb // 2
+        n = _group_size(line, default_group)
+        counts[op] += 1
+        payload[op] += rb
+        link += _link_bytes(op, rb, n)
+    return CollectiveStats(counts=counts, payload_bytes=payload,
+                           link_bytes=link)
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"\s{re.escape(opcode)}\(", hlo_text))

@@ -1,0 +1,11 @@
+from repro.models.model import Model, build_model
+from repro.models.params import (ParamSpec, abstract_params, init_params,
+                                 param_bytes, param_count)
+from repro.models.frontends import (abstract_inputs, input_specs,
+                                    make_sample_inputs)
+
+__all__ = [
+    "Model", "build_model", "ParamSpec", "abstract_params", "init_params",
+    "param_bytes", "param_count", "abstract_inputs", "input_specs",
+    "make_sample_inputs",
+]

@@ -1,0 +1,68 @@
+"""Modality frontends (STUBS per assignment) and input-spec builders.
+
+``[vlm]``/``[audio]`` archs specify the transformer backbone only; the
+frontend provides *precomputed* patch/frame embeddings:
+  qwen2-vl  -> patch embeddings (B,S,M) + 3D M-RoPE positions (3,B,S)
+  musicgen  -> EnCodec frame embeddings (B,S,M) (sum of codebook embeds)
+
+``input_specs(cfg, shape)`` returns a ParamSpec pytree describing every model
+input for that (arch x shape) cell — the dry-run lowers against
+``jax.ShapeDtypeStruct`` stand-ins derived from it (no allocation), smoke
+tests materialize small concrete samples from the same description.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.params import ParamSpec
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s, m = shape.global_batch, shape.seq_len, cfg.d_model
+    if shape.mode == "decode":
+        if cfg.frontend != "none":
+            return {"embeds": ParamSpec((b, m), jnp.bfloat16,
+                                        ("batch", "embed"))}
+        return {"tokens": ParamSpec((b,), jnp.int32, ("batch",))}
+
+    specs: dict = {}
+    if cfg.frontend != "none":
+        specs["embeds"] = ParamSpec((b, s, m), jnp.bfloat16,
+                                    ("batch", "seq", "embed"))
+        if cfg.pos_embed == "mrope":
+            specs["positions"] = ParamSpec((3, b, s), jnp.int32,
+                                           (None, "batch", "seq"))
+        if shape.mode == "train":
+            specs["labels"] = ParamSpec((b, s), jnp.int32, ("batch", "seq"))
+    else:
+        specs["tokens"] = ParamSpec((b, s), jnp.int32, ("batch", "seq"))
+    return specs
+
+
+def abstract_inputs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return jax.tree_util.tree_map(
+        lambda sp: sp.abstract(), input_specs(cfg, shape),
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def make_sample_inputs(cfg: ModelConfig, shape: ShapeConfig,
+                       seed: int = 0) -> dict:
+    """Small concrete batch for smoke tests / examples."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, sp in input_specs(cfg, shape).items():
+        if sp.dtype == jnp.int32:
+            if name in ("tokens", "labels"):
+                out[name] = jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, sp.shape), jnp.int32)
+            else:  # positions
+                s = sp.shape[-1]
+                pos = np.broadcast_to(np.arange(s, dtype=np.int32), sp.shape)
+                out[name] = jnp.asarray(pos)
+        else:
+            out[name] = jnp.asarray(
+                0.02 * rng.standard_normal(sp.shape), sp.dtype)
+    return out

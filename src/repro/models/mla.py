@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V2).
+
+KV is compressed to a ``kv_lora_rank`` latent (plus a single shared RoPE key
+head), which is what gets cached: 512+64 dims/token instead of
+2*H*head_dim.  Two decode paths:
+
+  * plain    — cached latents are re-expanded through W_uk/W_uv each step
+               (faithful to the algebra, heavy at long context)
+  * absorbed — W_uk is folded into the query and W_uv into the output
+               projection, so attention runs directly in latent space.
+               O(H*T*(lora+rope)) instead of O(T*lora*H*(dn+dv)) per step.
+               This is a beyond-paper decode optimization (EXPERIMENTS.md
+               §Perf, deepseek decode_32k hillclimb).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import NEG_INF, apply_norm, apply_rope, norm_specs
+from repro.models.params import ParamSpec
+
+
+def mla_specs(cfg: ModelConfig, mla: MLAConfig) -> dict:
+    m, h = cfg.d_model, cfg.num_heads
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    r = mla.kv_lora_rank
+    return {
+        "wq": ParamSpec((m, h, dn + dr), axes=("embed", "heads", "head_dim")),
+        "w_dkv": ParamSpec((m, r + dr), axes=("embed", "kv_lora")),
+        "kv_norm": norm_specs(cfg, r),
+        "w_uk": ParamSpec((r, h, dn), axes=("kv_lora", "heads", "head_dim")),
+        "w_uv": ParamSpec((r, h, dv), axes=("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, dv, m), axes=("heads", "head_dim", "embed")),
+    }
+
+
+def _compress(params, x, cfg: ModelConfig, mla: MLAConfig, positions):
+    """x -> (c_kv (B,S,r) normalized, k_rope (B,S,1,dr) rotated)."""
+    r, dr = mla.kv_lora_rank, mla.qk_rope_head_dim
+    ckv_full = jnp.einsum("bsm,mr->bsr", x, params["w_dkv"].astype(x.dtype))
+    c_kv = apply_norm(params["kv_norm"], ckv_full[..., :r], cfg.norm_type)
+    k_rope = ckv_full[..., r:][:, :, None, :]          # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def _queries(params, x, cfg: ModelConfig, mla: MLAConfig, positions):
+    dn, dr = mla.qk_nope_head_dim, mla.qk_rope_head_dim
+    q = jnp.einsum("bsm,mhd->bshd", x, params["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mask(t: int, q_positions: jax.Array, kv_valid_len) -> jax.Array:
+    j = jnp.arange(t)[None, None, :]
+    mask = j <= q_positions[:, :, None]
+    kvl = jnp.asarray(kv_valid_len)
+    mask &= j < (kvl if kvl.ndim == 0 else kvl.reshape(-1, 1, 1))
+    return mask                                        # (B,S,T)
+
+
+def mla_attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
+                  positions: jax.Array, cache: dict | None = None,
+                  cache_index: jax.Array | None = None,
+                  ) -> tuple[jax.Array, dict | None]:
+    """MLA self-attention; cache = {"c_kv": (B,T,r), "k_rope": (B,T,1,dr)}."""
+    mla = cfg.mla
+    b, s, m = x.shape
+    dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
+    scale = (dn + dr) ** -0.5
+
+    q_nope, q_rope = _queries(params, x, cfg, mla, positions)
+    c_kv, k_rope = _compress(params, x, cfg, mla, positions)
+
+    if cache is None:
+        ckv_all, krope_all, kv_len = c_kv, k_rope, s
+        new_cache = None
+    else:
+        ckv_all = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+            (0, cache_index, 0))
+        krope_all = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, cache_index, 0, 0))
+        kv_len = cache_index + s
+        new_cache = {"c_kv": ckv_all, "k_rope": krope_all}
+    t = ckv_all.shape[1]
+    w_uk = params["w_uk"].astype(x.dtype)
+    w_uv = params["w_uv"].astype(x.dtype)
+
+    if mla.absorb:
+        def attn_chunk(q_nope_c, q_rope_c, pos_c):
+            # fold W_uk into q: q_lat (B,C,H,r); score against raw latents.
+            mask = _mask(t, pos_c, kv_len)[:, None]
+            q_lat = jnp.einsum("bshd,rhd->bshr", q_nope_c, w_uk)
+            s_nope = jnp.einsum("bshr,btr->bhst",
+                                q_lat.astype(jnp.float32),
+                                ckv_all.astype(jnp.float32))
+            s_rope = jnp.einsum("bshd,btzd->bhst",
+                                q_rope_c.astype(jnp.float32),
+                                krope_all.astype(jnp.float32))
+            scores = jnp.where(mask, (s_nope + s_rope) * scale, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1)
+            ctx = jnp.einsum("bhst,btr->bshr", probs,
+                             ckv_all.astype(jnp.float32))   # (B,C,H,r)
+            return jnp.einsum("bshr,rhd->bshd", ctx.astype(x.dtype), w_uv)
+    else:
+        k_nope = jnp.einsum("btr,rhd->bthd", ckv_all, w_uk)   # (B,T,H,dn)
+        v = jnp.einsum("btr,rhd->bthd", ckv_all, w_uv)        # (B,T,H,dv)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope_all,
+                                      (b, t, cfg.num_heads, dr))], axis=-1)
+
+        def attn_chunk(q_nope_c, q_rope_c, pos_c):
+            mask = _mask(t, pos_c, kv_len)[:, None]
+            q = jnp.concatenate([q_nope_c, q_rope_c], axis=-1)
+            scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                                k_full.astype(jnp.float32)) * scale
+            scores = jnp.where(mask, scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1)
+            return jnp.einsum("bhst,bthd->bshd", probs,
+                              v.astype(jnp.float32)).astype(x.dtype)
+
+    from repro.models import layers as _L
+    from repro.models.layers import SCORE_CHUNK_ELEMS, _chunk_len
+    if s * t <= SCORE_CHUNK_ELEMS or s == 1:
+        y = attn_chunk(q_nope, q_rope, positions)
+    else:
+        cs = _chunk_len(s, t)
+        n = s // cs
+
+        def split(a):
+            return jnp.moveaxis(a.reshape(b, n, cs, *a.shape[2:]), 1, 0)
+
+        qn, qr, ps = split(q_nope), split(q_rope), split(positions)
+        if _L.ANALYSIS_UNROLL:
+            out = jnp.stack([attn_chunk(qn[i], qr[i], ps[i])
+                             for i in range(n)])
+        else:
+            out = jax.lax.map(lambda args: attn_chunk(*args), (qn, qr, ps))
+        y = jnp.moveaxis(out, 0, 1).reshape(b, s, cfg.num_heads, -1)
+    out = jnp.einsum("bshd,hdm->bsm", y, params["wo"].astype(x.dtype))
+    return out, new_cache

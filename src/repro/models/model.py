@@ -1,0 +1,468 @@
+"""Model assembly: config -> functional Model (init / forward / prefill / decode).
+
+All stacks of identical layers run under ``lax.scan`` with parameters stacked
+on a leading "layers" axis (essential to keep 126-layer HLO small).
+Heterogeneous structures (deepseek's dense layer 0, recurrentgemma's
+(rec, rec, attn) pattern) scan over the repeating unit and unroll remainders.
+
+Inputs dict:
+  {"tokens": (B,S) int32}                        LM archs
+  {"embeds": (B,S,M), "labels": (B,S) int32}     vlm/audio stub frontends
+  optional {"positions": (B,S) or (3,B,S)}       (M-RoPE)
+Decode inputs: {"tokens": (B,) } or {"embeds": (B,M)} plus scalar position t.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import hint
+from repro.models import layers as L
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rg_mod
+from repro.models import ssm as ssm_mod
+from repro.models.params import ParamSpec, abstract_params, init_params
+
+PyTree = Any
+
+
+def stack_specs(tree: PyTree, n: int) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, s.dtype, ("layers",) + s.axes,
+                            init=s.init, init_scale=s.init_scale),
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# --------------------------------------------------------------------------
+# Per-block specs
+# --------------------------------------------------------------------------
+def _block_specs(cfg: ModelConfig, kind: str) -> dict:
+    s: dict = {"ln1": L.norm_specs(cfg)}
+    if kind == "dense":
+        s["attn"] = L.attention_specs(cfg)
+        s["ln2"] = L.norm_specs(cfg)
+        s["mlp"] = L.mlp_specs(cfg)
+    elif kind == "moe_arctic":
+        s["attn"] = L.attention_specs(cfg)
+        s["ln2"] = L.norm_specs(cfg)
+        s["mlp"] = L.mlp_specs(cfg)                     # dense residual branch
+        s["moe"] = moe_mod.moe_specs(cfg, cfg.moe)
+    elif kind == "moe_ds":
+        s["attn"] = mla_mod.mla_specs(cfg, cfg.mla)
+        s["ln2"] = L.norm_specs(cfg)
+        s["moe"] = moe_mod.moe_specs(cfg, cfg.moe)
+        if cfg.moe.num_shared_experts:
+            s["shared"] = L.mlp_specs(cfg, cfg.moe.shared_d_ff)
+    elif kind == "ds_dense0":
+        s["attn"] = mla_mod.mla_specs(cfg, cfg.mla)
+        s["ln2"] = L.norm_specs(cfg)
+        s["mlp"] = L.mlp_specs(cfg, cfg.first_dense_d_ff)
+    elif kind == "ssm":
+        s["mixer"] = ssm_mod.ssm_specs(cfg, cfg.ssm)
+    elif kind == "rec":
+        s["mixer"] = rg_mod.rglru_specs(cfg, cfg.rglru)
+        s["ln2"] = L.norm_specs(cfg)
+        s["mlp"] = L.mlp_specs(cfg)
+    elif kind == "attn_local":
+        s["attn"] = L.attention_specs(cfg)
+        s["ln2"] = L.norm_specs(cfg)
+        s["mlp"] = L.mlp_specs(cfg)
+    else:
+        raise ValueError(kind)
+    return s
+
+
+def _attn_cache_specs(cfg: ModelConfig, batch: int, t_max: int) -> dict:
+    if cfg.mla is not None:
+        r, dr = cfg.mla.kv_lora_rank, cfg.mla.qk_rope_head_dim
+        return {"c_kv": ParamSpec((batch, t_max, r), jnp.bfloat16,
+                                  ("batch", "seq", "kv_lora"), init="zeros"),
+                "k_rope": ParamSpec((batch, t_max, 1, dr), jnp.bfloat16,
+                                    ("batch", "seq", None, "head_dim"),
+                                    init="zeros")}
+    k, d = cfg.num_kv_heads, cfg.head_dim
+    return {"k": ParamSpec((batch, t_max, k, d), jnp.bfloat16,
+                           ("batch", "seq", "kv_heads", "head_dim"),
+                           init="zeros"),
+            "v": ParamSpec((batch, t_max, k, d), jnp.bfloat16,
+                           ("batch", "seq", "kv_heads", "head_dim"),
+                           init="zeros")}
+
+
+def _block_cache_specs(cfg: ModelConfig, kind: str, batch: int,
+                       t_max: int) -> dict:
+    if kind in ("dense", "moe_arctic", "moe_ds", "ds_dense0"):
+        return _attn_cache_specs(cfg, batch, t_max)
+    if kind == "ssm":
+        ssm = cfg.ssm
+        conv_ch = ssm.d_inner + 2 * ssm.num_groups * ssm.state_dim
+        return {
+            "conv": ParamSpec((batch, ssm.conv_width - 1, conv_ch),
+                              jnp.bfloat16, ("batch", None, "inner"),
+                              init="zeros"),
+            "ssd": ParamSpec((batch, ssm.num_heads, ssm.head_dim,
+                              ssm.state_dim), jnp.float32,
+                             ("batch", "inner", None, "state"),
+                             init="zeros"),
+        }
+    if kind == "rec":
+        rg = cfg.rglru
+        return {
+            "h": ParamSpec((batch, rg.lru_width), jnp.float32,
+                           ("batch", "inner"), init="zeros"),
+            "conv": ParamSpec((batch, rg.conv_width - 1, rg.lru_width),
+                              jnp.bfloat16, ("batch", None, "inner"),
+                              init="zeros"),
+        }
+    if kind == "attn_local":
+        return rg_mod.window_cache_specs(cfg, batch)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# Per-block application
+# --------------------------------------------------------------------------
+def _apply_block(cfg: ModelConfig, kind: str, params: dict, x: jax.Array, *,
+                 positions: jax.Array, cache: dict | None,
+                 t: jax.Array | int,
+                 ) -> tuple[jax.Array, dict | None, jax.Array]:
+    """-> (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h, new_cache = ssm_mod.mamba2_block(
+            params["mixer"], L.apply_norm(params["ln1"], x, cfg.norm_type),
+            cfg=cfg, cache=cache)
+        return x + h, new_cache, aux
+
+    if kind == "rec":
+        h, new_cache = rg_mod.rglru_block(
+            params["mixer"], L.apply_norm(params["ln1"], x, cfg.norm_type),
+            cfg=cfg, cache=cache)
+        x = x + h
+        m = L.apply_mlp(params["mlp"],
+                        L.apply_norm(params["ln2"], x, cfg.norm_type),
+                        cfg.activation)
+        return x + m, new_cache, aux
+
+    # attention-bearing blocks -------------------------------------------
+    xa = L.apply_norm(params["ln1"], x, cfg.norm_type)
+    if kind in ("moe_ds", "ds_dense0"):
+        h, new_cache = mla_mod.mla_attention(
+            params["attn"], xa, cfg=cfg, positions=positions, cache=cache,
+            cache_index=t if cache is not None else None)
+    elif kind == "attn_local":
+        h, new_cache = _local_attention(cfg, params["attn"], xa,
+                                        positions=positions, cache=cache, t=t)
+    else:
+        h, new_cache = L.attention(
+            params["attn"], xa, cfg=cfg, positions=positions, cache=cache,
+            cache_index=t if cache is not None else None)
+    x = x + h
+    x = hint(x, ("batch", "seq", "embed"))
+    xm = L.apply_norm(params["ln2"], x, cfg.norm_type)
+
+    if kind in ("dense", "ds_dense0", "attn_local"):
+        x = x + L.apply_mlp(params["mlp"], xm, cfg.activation)
+    elif kind == "moe_arctic":
+        moe_out, aux = moe_mod.apply_moe(params["moe"], xm, cfg, cfg.moe)
+        x = x + L.apply_mlp(params["mlp"], xm, cfg.activation) + moe_out
+    elif kind == "moe_ds":
+        moe_out, aux = moe_mod.apply_moe(params["moe"], xm, cfg, cfg.moe)
+        if "shared" in params:
+            moe_out = moe_out + L.apply_mlp(params["shared"], xm,
+                                            cfg.activation)
+        x = x + moe_out
+    return x, new_cache, aux
+
+
+def _local_attention(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                     positions: jax.Array, cache: dict | None,
+                     t: jax.Array | int) -> tuple[jax.Array, dict | None]:
+    """RecurrentGemma local-attention layer (window ring-buffer cache)."""
+    window = cfg.rglru.window_size
+    b, s, _ = x.shape
+    q = jnp.einsum("bsm,mhd->bshd", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsm,mkd->bskd", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsm,mkd->bskd", x, params["wv"].astype(x.dtype))
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if cache is not None and s == 1:
+        y, new_cache = rg_mod.window_attention_decode(q, cache, k, v, t,
+                                                      window)
+    else:
+        y = L.attend(q, k, v, q_positions=positions, kv_valid_len=s,
+                     window=window)
+        new_cache = (rg_mod.fill_window_cache(cache, k, v, window)
+                     if cache is not None else None)
+    return jnp.einsum("bshd,hdm->bsm", y, params["wo"].astype(x.dtype)), \
+        new_cache
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class LayerPlan:
+    """How cfg.num_layers decomposes into scanned stacks / unrolled layers."""
+    prologue: tuple[str, ...]          # unrolled kinds before the scan
+    scan_kinds: tuple[str, ...]        # kinds inside one scanned group
+    n_groups: int
+    epilogue: tuple[str, ...]          # unrolled kinds after the scan
+
+
+def make_plan(cfg: ModelConfig) -> LayerPlan:
+    if cfg.family == "ssm":
+        return LayerPlan((), ("ssm",), cfg.num_layers, ())
+    if cfg.family == "hybrid":
+        pat = tuple("rec" if p == "rec" else "attn_local"
+                    for p in cfg.rglru.block_pattern)
+        n_groups = cfg.num_layers // len(pat)
+        rem = cfg.num_layers - n_groups * len(pat)
+        return LayerPlan((), pat, n_groups, pat[:rem])
+    if cfg.family == "moe":
+        kind = "moe_arctic" if cfg.moe.dense_residual else "moe_ds"
+        if cfg.first_dense_layers:
+            return LayerPlan(("ds_dense0",) * cfg.first_dense_layers, (kind,),
+                             cfg.num_layers - cfg.first_dense_layers, ())
+        return LayerPlan((), (kind,), cfg.num_layers, ())
+    return LayerPlan((), ("dense",), cfg.num_layers, ())
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.plan = make_plan(cfg)
+
+    # -- parameters ------------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg, plan = self.cfg, self.plan
+        specs: dict = {"embed": L.embed_specs(cfg)}
+        for i, kind in enumerate(plan.prologue):
+            specs[f"pro_{i}"] = _block_specs(cfg, kind)
+        if plan.n_groups:
+            group = {k if len(plan.scan_kinds) == 1 else f"{k}_{j}":
+                     _block_specs(cfg, k)
+                     for j, k in enumerate(plan.scan_kinds)}
+            specs["blocks"] = stack_specs(group, plan.n_groups)
+        for i, kind in enumerate(plan.epilogue):
+            specs[f"epi_{i}"] = _block_specs(cfg, kind)
+        specs["final_norm"] = L.norm_specs(cfg)
+        return specs
+
+    def init(self, rng: jax.Array) -> PyTree:
+        return init_params(rng, self.param_specs())
+
+    def abstract(self) -> PyTree:
+        return abstract_params(self.param_specs())
+
+    # -- caches ------------------------------------------------------------
+    def cache_specs(self, batch: int, t_max: int) -> dict:
+        cfg, plan = self.cfg, self.plan
+        out: dict = {}
+        for i, kind in enumerate(plan.prologue):
+            out[f"pro_{i}"] = _block_cache_specs(cfg, kind, batch, t_max)
+        if plan.n_groups:
+            group = {k if len(plan.scan_kinds) == 1 else f"{k}_{j}":
+                     _block_cache_specs(cfg, k, batch, t_max)
+                     for j, k in enumerate(plan.scan_kinds)}
+            out["blocks"] = stack_specs(group, plan.n_groups)
+        for i, kind in enumerate(plan.epilogue):
+            out[f"epi_{i}"] = _block_cache_specs(cfg, kind, batch, t_max)
+        return out
+
+    def init_cache(self, batch: int, t_max: int) -> PyTree:
+        cache = init_params(jax.random.PRNGKey(0),
+                            self.cache_specs(batch, t_max))
+        # ring-buffer position slots start invalid
+        def fix(path, leaf):
+            if any(getattr(p, "key", None) == "pos" for p in path):
+                return jnp.full_like(leaf, -1)
+            return jnp.zeros_like(leaf)
+        return jax.tree_util.tree_map_with_path(fix, cache)
+
+    # -- embedding / head ---------------------------------------------------
+    def _embed_inputs(self, params, inputs, positions):
+        cfg = self.cfg
+        if "embeds" in inputs:
+            x = inputs["embeds"].astype(jnp.bfloat16)
+        else:
+            x = L.embed(params["embed"], inputs["tokens"], cfg)
+        if cfg.pos_embed == "sinusoidal":
+            pe = L.sinusoidal_pe(
+                positions if positions.ndim == 2 else positions[-1],
+                cfg.d_model)
+            x = x + pe.astype(x.dtype)
+        return x
+
+    def _default_positions(self, b: int, s: int, t0: int | jax.Array = 0):
+        pos = t0 + jnp.arange(s, dtype=jnp.int32)[None, :]
+        pos = jnp.broadcast_to(pos, (b, s))
+        if self.cfg.pos_embed == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, b, s))
+        return pos
+
+    # -- stacks ------------------------------------------------------------
+    def _run_blocks(self, params, x, *, positions, caches, t, remat="none"):
+        cfg, plan = self.cfg, self.plan
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches: dict = {}
+
+        def group_fn(gp, x, gcache):
+            aux_g = jnp.zeros((), jnp.float32)
+            ncache: dict = {}
+            for j, kind in enumerate(plan.scan_kinds):
+                key = kind if len(plan.scan_kinds) == 1 else f"{kind}_{j}"
+                c = gcache.get(key) if gcache is not None else None
+                x2, nc, a = _apply_block(cfg, kind, gp[key], x,
+                                         positions=positions, cache=c, t=t)
+                x = x2
+                aux_g = aux_g + a
+                if nc is not None:
+                    ncache[key] = nc
+            return x, (ncache or None), aux_g
+
+        if remat == "full":
+            group_fn = jax.checkpoint(group_fn)
+        elif remat == "dots":
+            group_fn = jax.checkpoint(
+                group_fn,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+
+        for i, kind in enumerate(plan.prologue):
+            c = caches.get(f"pro_{i}") if caches is not None else None
+            x, nc, a = _apply_block(cfg, kind, params[f"pro_{i}"], x,
+                                    positions=positions, cache=c, t=t)
+            aux_total += a
+            if nc is not None:
+                new_caches[f"pro_{i}"] = nc
+
+        if plan.n_groups:
+            bcaches = caches.get("blocks") if caches is not None else None
+
+            if bcaches is None and L.ANALYSIS_UNROLL:
+                # roofline-analysis mode: unrolled so cost_analysis counts
+                # every group (see benchmarks/roofline.py)
+                for gi in range(plan.n_groups):
+                    gp = jax.tree_util.tree_map(lambda p: p[gi],
+                                                params["blocks"])
+                    x, _, a = group_fn(gp, x, None)
+                    aux_total = aux_total + a
+            elif bcaches is None:
+                def body(carry, gp):
+                    xx, aux = carry
+                    xx, _, a = group_fn(gp, xx, None)
+                    return (xx, aux + a), None
+                (x, aux_total), _ = jax.lax.scan(
+                    body, (x, aux_total), params["blocks"])
+            elif L.ANALYSIS_UNROLL:
+                ncs_list = []
+                for gi in range(plan.n_groups):
+                    gp = jax.tree_util.tree_map(lambda p: p[gi],
+                                                params["blocks"])
+                    gc = jax.tree_util.tree_map(lambda c: c[gi], bcaches)
+                    x, nc, a = group_fn(gp, x, gc)
+                    aux_total = aux_total + a
+                    ncs_list.append(nc)
+                new_caches["blocks"] = jax.tree_util.tree_map(
+                    lambda *cs: jnp.stack(cs), *ncs_list)
+            else:
+                def body(carry, xs):
+                    xx, aux = carry
+                    gp, gc = xs
+                    xx, nc, a = group_fn(gp, xx, gc)
+                    return (xx, aux + a), nc
+                (x, aux_total), ncs = jax.lax.scan(
+                    body, (x, aux_total), (params["blocks"], bcaches))
+                new_caches["blocks"] = ncs
+
+        for i, kind in enumerate(plan.epilogue):
+            c = caches.get(f"epi_{i}") if caches is not None else None
+            x, nc, a = _apply_block(cfg, kind, params[f"epi_{i}"], x,
+                                    positions=positions, cache=c, t=t)
+            aux_total += a
+            if nc is not None:
+                new_caches[f"epi_{i}"] = nc
+        return x, (new_caches or None), aux_total
+
+    # -- entry points --------------------------------------------------------
+    def forward(self, params, inputs, *, positions=None, remat="none"):
+        """Full-sequence forward -> (logits (B,S,V) fp32, aux)."""
+        cfg = self.cfg
+        b, s = (inputs["tokens"].shape if "tokens" in inputs
+                else inputs["embeds"].shape[:2])
+        if positions is None:
+            positions = inputs.get("positions")
+        if positions is None:
+            positions = self._default_positions(b, s)
+        x = self._embed_inputs(params, inputs, positions)
+        x = hint(x, ("batch", "seq", "embed"))
+        x, _, aux = self._run_blocks(params, x, positions=positions,
+                                     caches=None, t=0, remat=remat)
+        x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
+        return L.unembed(params["embed"], x, cfg), aux
+
+    def loss(self, params, batch, *, remat="none"):
+        """Next-token CE (+ MoE aux).  batch needs tokens or embeds+labels."""
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, remat=remat)
+        if "labels" in batch:
+            labels, mask = batch["labels"], batch.get("mask")
+            lg = logits
+        else:
+            tokens = batch["tokens"]
+            labels, lg = tokens[:, 1:], logits[:, :-1]
+            mask = batch.get("mask")
+            mask = mask[:, 1:] if mask is not None else None
+        ce = L.cross_entropy(lg, labels, mask)
+        aux_w = cfg.moe.aux_loss_weight if cfg.moe else 0.0
+        total = ce + aux_w * aux / max(cfg.num_layers, 1)
+        return total, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, inputs, cache, *, positions=None):
+        """Process a prompt, filling the cache.  -> (last logits (B,V), cache)."""
+        cfg = self.cfg
+        b, s = (inputs["tokens"].shape if "tokens" in inputs
+                else inputs["embeds"].shape[:2])
+        if positions is None:
+            positions = inputs.get("positions")
+        if positions is None:
+            positions = self._default_positions(b, s)
+        x = self._embed_inputs(params, inputs, positions)
+        x, new_cache, _ = self._run_blocks(params, x, positions=positions,
+                                           caches=cache, t=0)
+        x = L.apply_norm(params["final_norm"], x[:, -1:], cfg.norm_type)
+        logits = L.unembed(params["embed"], x, cfg)
+        return logits[:, 0], new_cache
+
+    def decode_step(self, params, inputs, cache, t):
+        """One-token decode at absolute position t (scalar int32)."""
+        cfg = self.cfg
+        if "tokens" in inputs:
+            b = inputs["tokens"].shape[0]
+            toks = inputs["tokens"].reshape(b, 1)
+            step_in = {"tokens": toks}
+        else:
+            b = inputs["embeds"].shape[0]
+            step_in = {"embeds": inputs["embeds"].reshape(b, 1, -1)}
+        positions = self._default_positions(b, 1, t)
+        x = self._embed_inputs(params, step_in, positions)
+        x, new_cache, _ = self._run_blocks(params, x, positions=positions,
+                                           caches=cache, t=t)
+        x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
+        logits = L.unembed(params["embed"], x, cfg)
+        return logits[:, 0], new_cache
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return _cached_model(cfg)

@@ -1,0 +1,94 @@
+"""Mixture-of-Experts layer: GShard-style top-k routing with capacity.
+
+Token-dropping dispatch/combine einsum formulation (the standard TPU MoE):
+tokens are flattened into groups of ``group_size``; each expert accepts
+``C = ceil(group_size * top_k * capacity_factor / E)`` tokens per group.
+The dispatch tensor is (G, Sg, E, C) so its footprint scales with the group
+size, not the global token count.
+
+Supports: shared experts (DeepSeek-V2) and a parallel dense-FFN residual
+branch (Arctic) — both handled in the model assembly, not here.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.dist.sharding import hint
+from repro.models.params import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig, moe: MoEConfig) -> dict:
+    m, f, e = cfg.d_model, moe.expert_d_ff, moe.num_experts
+    return {
+        "router": ParamSpec((m, e), jnp.float32, ("embed", None)),
+        "w_gate": ParamSpec((e, m, f), axes=("expert", "embed", "mlp")),
+        "w_up": ParamSpec((e, m, f), axes=("expert", "embed", "mlp")),
+        "w_down": ParamSpec((e, f, m), axes=("expert", "mlp", "embed")),
+    }
+
+
+def _group_size(total_tokens: int, target: int = 512) -> int:
+    """Largest divisor of total_tokens that is <= target."""
+    best = 1
+    for g in range(1, min(target, total_tokens) + 1):
+        if total_tokens % g == 0:
+            best = g
+    return best
+
+
+def apply_moe(params: dict, x: jax.Array, cfg: ModelConfig, moe: MoEConfig,
+              ) -> tuple[jax.Array, jax.Array]:
+    """-> (output (B,S,M), aux load-balance loss scalar fp32)."""
+    b, s, m = x.shape
+    e, k = moe.num_experts, moe.top_k
+    total = b * s
+    sg = _group_size(total)
+    g = total // sg
+    xg = x.reshape(g, sg, m)
+    xg = hint(xg, ("groups", None, "embed"))
+
+    # --- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gsm,me->gse", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,Sg,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (G,Sg,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # --- capacity dispatch --------------------------------------------------
+    cap = max(1, int(math.ceil(sg * k * moe.capacity_factor / e)))
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)    # (G,Sg,k,E)
+    flat = onehot.reshape(g, sg * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # exclusive
+    slot = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                          dtype=jnp.float32) * flat[..., None]  # (G,Sg*k,E,C)
+    slot = slot.reshape(g, sg, k, e, cap)
+    dispatch = jnp.sum(slot, axis=2)                           # (G,Sg,E,C)
+    combine = jnp.sum(slot * gate_vals[..., None, None], axis=2)
+
+    # --- expert compute ------------------------------------------------------
+    dsp = dispatch.astype(x.dtype)
+    expert_in = jnp.einsum("gsec,gsm->egcm", dsp, xg)          # (E,G,C,M)
+    expert_in = hint(expert_in, ("expert", "groups", None, "embed"))
+    gate_h = jnp.einsum("egcm,emf->egcf", expert_in,
+                        params["w_gate"].astype(x.dtype))
+    up_h = jnp.einsum("egcm,emf->egcf", expert_in,
+                      params["w_up"].astype(x.dtype))
+    act = jax.nn.silu if cfg.activation != "geglu" else (
+        lambda a: jax.nn.gelu(a, approximate=True))
+    h = act(gate_h.astype(jnp.float32)).astype(x.dtype) * up_h
+    expert_out = jnp.einsum("egcf,efm->egcm", h,
+                            params["w_down"].astype(x.dtype))
+    expert_out = hint(expert_out, ("expert", "groups", None, "embed"))
+    out = jnp.einsum("gsec,egcm->gsm", combine.astype(x.dtype), expert_out)
+
+    # --- load-balance auxiliary loss (switch-style) --------------------------
+    frac = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1)) / k  # (E,)
+    mean_prob = jnp.mean(probs, axis=(0, 1))                   # (E,)
+    aux = e * jnp.sum(frac * mean_prob)
+
+    return out.reshape(b, s, m), aux.astype(jnp.float32)

@@ -1,0 +1,189 @@
+"""RG-LRU recurrent block + local-attention cache (RecurrentGemma / Griffin).
+
+Recurrent block:
+    y_branch = gelu(x W_y)
+    u        = conv1d(x W_x)                      (causal depthwise, width 4)
+    r_t      = sigmoid(BlockDiag_a(u_t));  i_t = sigmoid(BlockDiag_x(u_t))
+    log a_t  = -c * r_t * softplus(Lambda)        (c = 8)
+    h_t      = exp(log a_t) h_{t-1} + sqrt(1 - a_t^2) (i_t * u_t)
+    out      = (h * y_branch) W_out
+
+The linear recurrence runs as a parallel associative scan (fp32).  Gates use
+block-diagonal linears with num_heads blocks, as in the DeepMind reference.
+
+The attention layers of the hybrid use a *ring-buffer* window cache: slot
+``pos % window`` holds token ``pos``; per-slot absolute positions make the
+mask exact, so decode state stays O(window) — this is what makes
+recurrentgemma runnable at the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RGLRUConfig
+from repro.models.params import ParamSpec
+from repro.models.ssm import causal_conv1d
+
+C_GATE = 8.0
+
+
+def rglru_specs(cfg: ModelConfig, rg: RGLRUConfig) -> dict:
+    m, w = cfg.d_model, rg.lru_width
+    nb = max(cfg.num_heads, 1)
+    bw = w // nb
+    return {
+        "w_x": ParamSpec((m, w), axes=("embed", "inner")),
+        "w_y": ParamSpec((m, w), axes=("embed", "inner")),
+        "conv_w": ParamSpec((rg.conv_width, w), jnp.float32, ("conv", "inner")),
+        "conv_b": ParamSpec((w,), jnp.float32, ("inner",), init="zeros"),
+        "gate_a_w": ParamSpec((nb, bw, bw), jnp.float32,
+                              ("heads", None, None)),
+        "gate_a_b": ParamSpec((nb, bw), jnp.float32, ("heads", None),
+                              init="zeros"),
+        "gate_x_w": ParamSpec((nb, bw, bw), jnp.float32,
+                              ("heads", None, None)),
+        "gate_x_b": ParamSpec((nb, bw), jnp.float32, ("heads", None),
+                              init="zeros"),
+        "lam": ParamSpec((w,), jnp.float32, ("inner",), init="normal",
+                         init_scale=0.8),
+        "w_out": ParamSpec((w, m), axes=("inner", "embed")),
+    }
+
+
+def _block_diag(u: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """u (B,S,W) through block-diagonal linear w (NB,BW,BW) + b (NB,BW)."""
+    bsz, s, width = u.shape
+    nb, bw, _ = w.shape
+    ub = u.reshape(bsz, s, nb, bw).astype(jnp.float32)
+    out = jnp.einsum("bsnw,nwv->bsnv", ub, w) + b
+    return out.reshape(bsz, s, width)
+
+
+def _lru_scan(log_a: jax.Array, gated_x: jax.Array,
+              h0: jax.Array | None) -> tuple[jax.Array, jax.Array]:
+    """h_t = exp(log_a_t) h_{t-1} + gated_x_t via associative scan (fp32).
+
+    log_a, gated_x: (B,S,W).  h0: (B,W) or None.  -> (h (B,S,W), h_last)."""
+    if h0 is not None:
+        # fold the initial state in as a virtual step 0
+        log_a = jnp.concatenate(
+            [jnp.zeros_like(log_a[:, :1]), log_a], axis=1)
+        gated_x = jnp.concatenate(
+            [h0.astype(gated_x.dtype)[:, None], gated_x], axis=1)
+
+    def combine(left, right):
+        la, lb = left
+        ra, rb = right
+        return la + ra, jnp.exp(ra) * lb + rb
+
+    a_acc, h = jax.lax.associative_scan(combine, (log_a, gated_x), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h, h[:, -1]
+
+
+def rglru_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
+                cache: dict | None = None,
+                ) -> tuple[jax.Array, dict | None]:
+    """Full Griffin recurrent block.
+
+    cache = {"h": (B,W) fp32, "conv": (B,conv_width-1,W)}."""
+    rg = cfg.rglru
+    y_branch = jnp.einsum("bsm,mw->bsw", x, params["w_y"].astype(x.dtype))
+    y_branch = jax.nn.gelu(y_branch.astype(jnp.float32),
+                           approximate=True).astype(x.dtype)
+    u = jnp.einsum("bsm,mw->bsw", x, params["w_x"].astype(x.dtype))
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = causal_conv1d(u, params["conv_w"], params["conv_b"],
+                                conv_state)
+
+    r = jax.nn.sigmoid(_block_diag(u, params["gate_a_w"], params["gate_a_b"]))
+    i = jax.nn.sigmoid(_block_diag(u, params["gate_x_w"], params["gate_x_b"]))
+    log_a = -C_GATE * r * jax.nn.softplus(params["lam"])      # (B,S,W) fp32
+    a_sq = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a_sq, 1e-12)) * (
+        i * u.astype(jnp.float32))
+
+    h0 = cache["h"] if cache is not None else None
+    if cache is not None and x.shape[1] == 1:
+        h_new = (jnp.exp(log_a[:, 0]) * h0.astype(jnp.float32)
+                 + gated[:, 0])
+        h = h_new[:, None]
+        h_last = h_new
+    else:
+        h, h_last = _lru_scan(log_a, gated, h0)
+    out = h.astype(x.dtype) * y_branch
+    out = jnp.einsum("bsw,wm->bsm", out, params["w_out"].astype(x.dtype))
+    new_cache = ({"h": h_last, "conv": new_conv}
+                 if cache is not None else None)
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# Ring-buffer window cache for the hybrid's local-attention layers
+# --------------------------------------------------------------------------
+def window_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    rg = cfg.rglru
+    w = rg.window_size
+    return {
+        "k": ParamSpec((batch, w, cfg.num_kv_heads, cfg.head_dim),
+                       jnp.bfloat16, ("batch", "window", "kv_heads",
+                                      "head_dim"), init="zeros"),
+        "v": ParamSpec((batch, w, cfg.num_kv_heads, cfg.head_dim),
+                       jnp.bfloat16, ("batch", "window", "kv_heads",
+                                      "head_dim"), init="zeros"),
+        "pos": ParamSpec((batch, w), jnp.int32, ("batch", "window"),
+                         init="zeros"),
+    }
+
+
+def init_window_cache(cfg: ModelConfig, batch: int) -> dict:
+    from repro.models.params import init_params
+    import jax.random as jr
+    cache = init_params(jr.PRNGKey(0), window_cache_specs(cfg, batch))
+    cache["pos"] = jnp.full_like(cache["pos"], -1)   # invalid slots
+    return cache
+
+
+def window_attention_decode(q: jax.Array, cache: dict, k_new: jax.Array,
+                            v_new: jax.Array, t: jax.Array,
+                            window: int) -> tuple[jax.Array, dict]:
+    """One-token attention against a ring-buffer cache.
+
+    q (B,1,H,D); k_new/v_new (B,1,K,D); t scalar int32 absolute position.
+    Returns (context (B,1,H,D), new_cache)."""
+    slot = jnp.mod(t, window)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.broadcast_to(t, (cache["pos"].shape[0], 1)
+                                       ).astype(jnp.int32), (0, slot))
+    b, _, h, d = q.shape
+    kh = ck.shape[2]
+    g = h // kh
+    qf = q.reshape(b, 1, kh, g, d).astype(jnp.float32) * (d ** -0.5)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, ck.astype(jnp.float32))
+    valid = (cpos >= 0) & (cpos <= t) & (cpos > t - window)    # (B,Wnd)
+    scores = jnp.where(valid[:, None, None, None, :], scores, -2.38e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, cv.astype(jnp.float32))
+    ctx = ctx.reshape(b, 1, h, d).astype(q.dtype)
+    return ctx, {"k": ck, "v": cv, "pos": cpos}
+
+
+def fill_window_cache(cache: dict, k: jax.Array, v: jax.Array,
+                      window: int) -> dict:
+    """After prefill of S tokens, load the last min(S, window) into the ring
+    buffer at their pos%window slots."""
+    b, s = k.shape[0], k.shape[1]
+    take = min(s, window)
+    pos = jnp.arange(s - take, s, dtype=jnp.int32)             # absolute
+    slots = jnp.mod(pos, window)
+    ck = cache["k"].at[:, slots].set(k[:, -take:].astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(v[:, -take:].astype(cache["v"].dtype))
+    cpos = cache["pos"].at[:, slots].set(
+        jnp.broadcast_to(pos, (b, take)))
+    return {"k": ck, "v": cv, "pos": cpos}

@@ -1,0 +1,210 @@
+"""Mamba-2 block: chunked SSD (state-space duality) scan.
+
+Recurrence (per head, state (P=head_dim, N=state_dim)):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (x_t  B_t^T)      (outer product)
+    y_t = C_t . h_t + D * x_t
+
+The chunked algorithm splits the sequence into chunks of Q tokens:
+intra-chunk contributions are a masked (Q,Q) matmul (attention-like, MXU
+friendly — Pallas kernel in repro.kernels.ssd_scan), inter-chunk state is a
+cheap scan over chunk summaries.  Reference math here is pure jnp; the
+kernel is validated against it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.params import ParamSpec
+from repro.models.layers import norm_specs, apply_norm
+
+
+def ssm_specs(cfg: ModelConfig, ssm: SSMConfig) -> dict:
+    m = cfg.d_model
+    di, g, n, nh = ssm.d_inner, ssm.num_groups, ssm.state_dim, ssm.num_heads
+    conv_ch = di + 2 * g * n
+    d_in_proj = 2 * di + 2 * g * n + nh
+    return {
+        "in_proj": ParamSpec((m, d_in_proj), axes=("embed", "inner")),
+        "conv_w": ParamSpec((ssm.conv_width, conv_ch), jnp.float32,
+                            ("conv", "inner")),
+        "conv_b": ParamSpec((conv_ch,), jnp.float32, ("inner",), init="zeros"),
+        "A_log": ParamSpec((nh,), jnp.float32, (None,), init="zeros"),
+        "dt_bias": ParamSpec((nh,), jnp.float32, (None,), init="zeros"),
+        "D": ParamSpec((nh,), jnp.float32, (None,), init="ones"),
+        "norm": norm_specs(cfg, di),
+        "out_proj": ParamSpec((di, m), axes=("inner", "embed")),
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array | None = None,
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x (B,S,C), w (W,C).  state (B,W-1,C) holds the
+    trailing context from previous steps.  Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)   # (B,S+W-1,C)
+    # sum_w xp[:, t + i, c] * w[i, c]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(width))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y, new_state
+
+
+def ssd_reference(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                  c: jax.Array, *, chunk_size: int,
+                  initial_state: jax.Array | None = None,
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan (pure-jnp oracle).
+
+    x  (B,L,H,P)   inputs per head
+    dt (B,L,H)     softplus'd step sizes (fp32)
+    a  (H,)        negative decay rates A (fp32, a<0)
+    b  (B,L,H,N)   input projections (already broadcast group->head)
+    c  (B,L,H,N)   output projections
+    -> (y (B,L,H,P), final_state (B,H,P,N))
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    q = chunk_size
+    orig_l = l
+    if l % q:
+        # zero-dt padding is exact: decay exp(0*a)=1, input contribution 0.
+        pad = q - l % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = x.shape[1]
+    nc = l // q
+    xf = x.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, q, h)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, q, h, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, q, h, n)
+
+    da = dtf * a                                   # (B,NC,Q,H) log-decay <0
+    seg = jnp.cumsum(da, axis=2)                   # inclusive cumsum
+    total = seg[:, :, -1:, :]                      # (B,NC,1,H)
+
+    # intra-chunk: y[i] += sum_{j<=i} exp(seg_i - seg_j) (C_i.B_j) dt_j x_j
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]   # (B,NC,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    gate = jnp.where(causal[None, None, :, :, None], jnp.exp(decay), 0.0)
+    cb = jnp.einsum("bkihn,bkjhn->bkijh", cf, bf)
+    m_att = cb * gate * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", m_att, xf)
+
+    # chunk summary states: S_k = sum_j exp(total - seg_j) dt_j B_j x_j^T
+    w = jnp.exp(total - seg) * dtf                 # (B,NC,Q,H)
+    s_chunk = jnp.einsum("bkjh,bkjhn,bkjhp->bkhpn", w, bf, xf)
+
+    # inter-chunk recurrence over chunk index
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        s_k, tot_k = inp                           # (B,H,P,N), (B,H)
+        state_in = carry
+        state_out = jnp.exp(tot_k)[:, :, None, None] * state_in + s_k
+        return state_out, state_in
+
+    tot = total[:, :, 0, :]                        # (B,NC,H)
+    from repro.models import layers as _L
+    if _L.ANALYSIS_UNROLL:
+        carry = init
+        ins = []
+        for ci in range(nc):
+            carry, prev = step(carry, (s_chunk[:, ci], tot[:, ci]))
+            ins.append(prev)
+        final, states_in = carry, jnp.stack(ins, axis=1)
+    else:
+        final, states_in = jax.lax.scan(
+            step, init,
+            (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(tot, 1, 0)))
+        states_in = jnp.moveaxis(states_in, 0, 1)  # (B,NC,H,P,N) entering
+
+    # inter-chunk output: y[i] += C_i . (exp(seg_i) * state_in)
+    y_inter = jnp.einsum("bkihn,bkih,bkhpn->bkihp", cf, jnp.exp(seg),
+                         states_in)
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)[:, :orig_l]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    a: jax.Array, b: jax.Array, c: jax.Array,
+                    ) -> tuple[jax.Array, jax.Array]:
+    """One-token SSD update.  state (B,H,P,N); x (B,H,P); dt (B,H);
+    b,c (B,H,N).  -> (y (B,H,P), new_state)."""
+    sf = state.astype(jnp.float32)
+    da = jnp.exp(dt.astype(jnp.float32) * a)       # (B,H)
+    upd = (dt.astype(jnp.float32)[..., None, None]
+           * x.astype(jnp.float32)[..., None] * b[:, :, None, :])
+    new_state = da[..., None, None] * sf + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c.astype(jnp.float32))
+    return y.astype(x.dtype), new_state
+
+
+def _split_proj(zxbcdt: jax.Array, ssm: SSMConfig):
+    di, g, n, nh = ssm.d_inner, ssm.num_groups, ssm.state_dim, ssm.num_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    return z, xbc, dt
+
+
+def _expand_groups(t: jax.Array, nh: int) -> jax.Array:
+    """(B,S,G,N) -> (B,S,H,N) by repeating each group H/G times."""
+    b, s, g, n = t.shape
+    rep = nh // g
+    return jnp.repeat(t, rep, axis=2) if rep > 1 else t
+
+
+def mamba2_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
+                 cache: dict | None = None,
+                 ) -> tuple[jax.Array, dict | None]:
+    """Full Mamba-2 mixer.  cache = {"conv": (B,W-1,C), "ssd": (B,H,P,N)}."""
+    ssm = cfg.ssm
+    bsz, s, _ = x.shape
+    di, g, n, nh, p = (ssm.d_inner, ssm.num_groups, ssm.state_dim,
+                       ssm.num_heads, ssm.head_dim)
+    zxbcdt = jnp.einsum("bsm,md->bsd", x, params["in_proj"].astype(x.dtype))
+    z, xbc, dt = _split_proj(zxbcdt, ssm)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = causal_conv1d(xbc, params["conv_w"], params["conv_b"],
+                                  conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    x_ssm = xbc[..., :di].reshape(bsz, s, nh, p)
+    b_mat = _expand_groups(xbc[..., di:di + g * n].reshape(bsz, s, g, n), nh)
+    c_mat = _expand_groups(xbc[..., di + g * n:].reshape(bsz, s, g, n), nh)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+
+    if cache is not None and s == 1:
+        y1, new_ssd = ssd_decode_step(
+            cache["ssd"], x_ssm[:, 0], dtv[:, 0], a,
+            b_mat[:, 0].astype(jnp.float32), c_mat[:, 0].astype(jnp.float32))
+        y = y1[:, None]
+    else:
+        from repro.kernels import dispatch
+        fn = dispatch.get_ssd()
+        init = cache["ssd"] if cache is not None else None
+        if fn is not None:
+            y, new_ssd = fn(x_ssm, dtv, a, b_mat, c_mat,
+                            chunk_size=ssm.chunk_size, initial_state=init)
+        else:
+            y, new_ssd = ssd_reference(x_ssm, dtv, a, b_mat, c_mat,
+                                       chunk_size=ssm.chunk_size,
+                                       initial_state=init)
+    y = y + (params["D"][:, None] * x_ssm.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(bsz, s, di)
+    # gated RMSNorm then out-projection
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = apply_norm(params["norm"], y, cfg.norm_type)
+    out = jnp.einsum("bsd,dm->bsm", y, params["out_proj"].astype(x.dtype))
+    new_cache = ({"conv": new_conv, "ssd": new_ssd}
+                 if cache is not None else None)
+    return out, new_cache

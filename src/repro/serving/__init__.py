@@ -1,0 +1,10 @@
+from repro.serving.simulator import SimConfig, Simulator, run_sweep
+from repro.serving.request import (poisson_workload, qos_inverse_weights,
+                                   uniform_workload)
+from repro.serving.tenants import build_paper_plans, lm_serving_plans
+
+__all__ = [
+    "SimConfig", "Simulator", "run_sweep", "poisson_workload",
+    "qos_inverse_weights", "uniform_workload", "build_paper_plans",
+    "lm_serving_plans",
+]

@@ -1,0 +1,137 @@
+"""Batched serving engine (real JAX execution path).
+
+Wraps a model's prefill/decode with continuous batching over request
+slots: requests join free slots, prefill fills their cache rows, decode
+steps run the whole batch, finished rows free their slots.  This is the
+engine the examples drive on CPU with reduced models; at pod scale the
+same functions are jitted with the serve-mode shardings (launch/serve.py).
+
+The VELTAIR integration point: ``set_interference_level`` switches the
+active kernel tile overrides (repro.kernels.dispatch) to the version the
+adaptive compiler selected — the engine is oblivious to how the level was
+derived.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model, build_model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (len,) int32
+    max_new_tokens: int = 16
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
+                 max_len: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.model: Model = build_model(cfg)
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.greedy = greedy
+        self.cache = self.model.init_cache(batch_slots, max_len)
+        self.slot_req: list[Request | None] = [None] * batch_slots
+        self.slot_pos = np.zeros(batch_slots, np.int32)
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill_one = jax.jit(
+            lambda p, toks, cache: build_model(cfg).prefill(
+                p, {"tokens": toks}, cache))
+
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> int | None:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    @staticmethod
+    def _batch_axis(path) -> int:
+        """Scanned block caches carry a leading layer axis: batch is axis 1
+        under the 'blocks' subtree, axis 0 elsewhere."""
+        return 1 if any(getattr(p, "key", None) == "blocks"
+                        for p in path) else 0
+
+    def _slice_row(self, slot: int):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, c: jax.lax.slice_in_dim(c, slot, slot + 1,
+                                              axis=self._batch_axis(p)),
+            self.cache)
+
+    def _write_row(self, row_cache, slot: int):
+        def put(p, c, r):
+            ax = self._batch_axis(p)
+            idx = [slice(None)] * c.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return c.at[tuple(idx)].set(r.astype(c.dtype))
+        return jax.tree_util.tree_map_with_path(put, self.cache, row_cache)
+
+    def add_request(self, req: Request) -> bool:
+        """Admit a request: prefill its prompt into its slot's cache rows.
+
+        Single-row prefill runs on a batch-1 view then writes the slot row
+        (slot caches are independent along the batch axis)."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        logits, row_cache = self._prefill_one(self.params, toks,
+                                              self._slice_row(slot))
+        self.cache = self._write_row(row_cache, slot)
+        first = int(jnp.argmax(logits[0]))
+        req.output.append(first)
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = len(req.prompt)
+        return True
+
+    def step(self) -> list[Request]:
+        """One decode step for every active slot; returns finished reqs."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return []
+        toks = np.zeros(self.slots, np.int32)
+        for i in active:
+            toks[i] = self.slot_req[i].output[-1]
+        # homogeneous decode position: engine steps slots in lockstep using
+        # the max position; per-slot kv_valid masking keeps rows exact when
+        # positions align (examples use aligned prompts).
+        t = int(self.slot_pos[active].max())
+        logits, self.cache = self._decode(
+            self.params, {"tokens": jnp.asarray(toks)}, self.cache,
+            jnp.int32(t))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        finished = []
+        for i in active:
+            req = self.slot_req[i]
+            req.output.append(int(nxt[i]))
+            self.slot_pos[i] += 1
+            if len(req.output) >= req.max_new_tokens + 1 or \
+                    self.slot_pos[i] >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                self.slot_req[i] = None
+        return finished
+
+    def run_to_completion(self, reqs: list[Request],
+                          max_steps: int = 10_000) -> list[Request]:
+        pending = list(reqs)
+        done: list[Request] = []
+        steps = 0
+        while (pending or any(r is not None for r in self.slot_req)) \
+                and steps < max_steps:
+            while pending and self.add_request(pending[0]):
+                pending.pop(0)
+            done.extend(self.step())
+            steps += 1
+        return done

@@ -1,0 +1,37 @@
+"""Query/workload generation (MLPerf-Server style).
+
+Arrivals are Poisson with rate lambda = offered QPS (the paper's setup);
+mixed workloads draw each query's model with probability inversely
+proportional to its QoS target (paper §5.1, following the Google-trace
+analysis they cite).  A deterministic uniform generator reproduces the
+Fig. 3 experiment (30k identical ResNet-50 queries, uniform arrivals).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def poisson_workload(models: list[str], qps: float, n_queries: int,
+                     seed: int = 0,
+                     weights: list[float] | None = None,
+                     ) -> list[tuple[float, str]]:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / qps, n_queries)
+    times = np.cumsum(gaps)
+    if weights is None:
+        probs = np.ones(len(models)) / len(models)
+    else:
+        w = np.asarray(weights, dtype=float)
+        probs = w / w.sum()
+    names = rng.choice(models, size=n_queries, p=probs)
+    return list(zip(times.tolist(), names.tolist()))
+
+
+def uniform_workload(model: str, qps: float,
+                     n_queries: int) -> list[tuple[float, str]]:
+    gap = 1.0 / qps
+    return [(i * gap, model) for i in range(n_queries)]
+
+
+def qos_inverse_weights(qos_ms: dict[str, float]) -> list[float]:
+    return [1.0 / qos_ms[m] for m in qos_ms]

@@ -1,0 +1,45 @@
+"""Tenant setup: compile paper-suite / LM-arch models into ModelPlans."""
+from __future__ import annotations
+
+import functools
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ShapeConfig
+from repro.configs.paper_suite import paper_models
+from repro.core import cost_model as cm
+from repro.core.layer_block import ModelPlan, make_model_plan
+from repro.core.multiversion import compile_model
+from repro.core.profiles import lm_layers
+
+
+@functools.lru_cache(maxsize=None)
+def paper_plan(name: str, hw_name: str = "cpu") -> ModelPlan:
+    hw = cm.CPU_3990X if hw_name == "cpu" else cm.TPU_V5E_POD
+    pm = paper_models()[name]
+    layers = list(pm.layers)
+    qos_s = pm.qos_ms * 1e-3
+    vsets = compile_model(layers, hw, qos_s)
+    return make_model_plan(name, layers, vsets, qos_s, hw)
+
+
+def build_paper_plans(names, hw: cm.HardwareSpec) -> dict[str, ModelPlan]:
+    key = "cpu" if hw.cache_shared else "tpu"
+    return {n: paper_plan(n, key) for n in names}
+
+
+@functools.lru_cache(maxsize=None)
+def lm_plan(arch: str, shape_name: str, qos_ms: float) -> ModelPlan:
+    """LM tenant on the TPU pod (serving shapes; decode/prefill)."""
+    hw = cm.TPU_V5E_POD
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    layers = lm_layers(cfg, shape)
+    qos_s = qos_ms * 1e-3
+    vsets = compile_model(layers, hw, qos_s)
+    return make_model_plan(f"{arch}:{shape_name}", layers, vsets, qos_s, hw)
+
+
+def lm_serving_plans(specs: list[tuple[str, str, float]],
+                     ) -> dict[str, ModelPlan]:
+    """specs: [(arch, shape_name, qos_ms)] -> plans keyed arch:shape."""
+    return {f"{a}:{s}": lm_plan(a, s, q) for a, s, q in specs}

@@ -1,0 +1,8 @@
+from repro.training.optimizer import (OptimizerConfig, apply_updates,
+                                      init_opt_state, schedule_fn)
+from repro.training.train_step import (TrainConfig, init_train_state,
+                                       make_train_step)
+
+__all__ = ["OptimizerConfig", "apply_updates", "init_opt_state",
+           "schedule_fn", "TrainConfig", "init_train_state",
+           "make_train_step"]

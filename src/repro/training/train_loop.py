@@ -1,0 +1,78 @@
+"""Training loop: checkpoint/restart, preemption-safe, metric logging."""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, TokenPipeline
+from repro.models.model import Model
+from repro.training.train_step import (TrainConfig, init_train_state,
+                                       make_train_step)
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+
+
+def train_loop(model: Model, train_cfg: TrainConfig, data_cfg: DataConfig,
+               loop_cfg: LoopConfig, *, jit_kwargs: dict | None = None,
+               log=print) -> dict:
+    """Run (or resume) training; returns the final state and loss history."""
+    step_fn = make_train_step(model, train_cfg)
+    step_fn = jax.jit(step_fn, donate_argnums=(0,), **(jit_kwargs or {}))
+    pipeline = TokenPipeline(data_cfg)
+
+    state = init_train_state(model, jax.random.PRNGKey(loop_cfg.seed),
+                             train_cfg)
+    start_step = 0
+    ckpt = None
+    if loop_cfg.ckpt_dir:
+        ckpt = Checkpointer(loop_cfg.ckpt_dir)
+        if ckpt.latest_step() is not None:
+            state, start_step = ckpt.restore(None, state)
+            log(f"[train] resumed from step {start_step}")
+
+    # preemption safety: SIGTERM triggers an emergency checkpoint
+    preempted = {"flag": False}
+
+    def _handler(signum, frame):
+        preempted["flag"] = True
+    prev = signal.signal(signal.SIGTERM, _handler)
+
+    losses = []
+    t0 = time.time()
+    try:
+        for step in range(start_step, loop_cfg.total_steps):
+            batch = jax.tree_util.tree_map(jax.numpy.asarray,
+                                           pipeline.batch(step))
+            state, metrics = step_fn(state, batch)
+            if step % loop_cfg.log_every == 0 or \
+                    step == loop_cfg.total_steps - 1:
+                loss = float(metrics["loss"])
+                losses.append((step, loss))
+                log(f"[train] step {step} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} "
+                    f"({time.time()-t0:.1f}s)")
+            if ckpt and (step + 1) % loop_cfg.ckpt_every == 0:
+                ckpt.save_async(step + 1, state)
+            if preempted["flag"]:
+                if ckpt:
+                    ckpt.wait()
+                    ckpt.save(step + 1, state)
+                    log(f"[train] preempted: emergency checkpoint @ {step+1}")
+                break
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+        if ckpt:
+            ckpt.wait()
+    return {"state": state, "losses": losses}

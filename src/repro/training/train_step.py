@@ -1,0 +1,146 @@
+"""Train step: grad accumulation (lax.scan over microbatches) + remat.
+
+Mixed precision, master-only state: the optimizer's fp32 master copy is
+the single source of truth (no separate bf16 param tree in the state — that
+would alias fp32 leaves and break donation).  The step casts master ->
+per-leaf model dtypes for the forward/backward; backprop runs in bf16 and
+the cast's vjp yields fp32 per-param grads, which accumulate across
+microbatches in ``accum_dtype`` (bf16 halves the accumulator footprint —
+required for the 405B single-pod fit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.params import ParamSpec
+from repro.training.optimizer import (OptimizerConfig, apply_updates,
+                                      init_opt_state)
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = OptimizerConfig()
+    accum_steps: int = 1              # microbatches per step
+    remat: str = "full"               # none | full | dots
+    accum_dtype: str = "float32"      # float32 | bfloat16
+    # int8 gradient compression with error feedback: models a compressed
+    # cross-replica gradient exchange (per-tensor absmax scale, residual
+    # carried in the state so quantization error re-enters the next step)
+    grad_compression: str = "none"    # none | int8
+
+
+def init_train_state(model: Model, rng: jax.Array,
+                     cfg: TrainConfig) -> dict:
+    params = model.init(rng)
+    state = {
+        "opt": init_opt_state(cfg.optimizer, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.grad_compression == "int8":
+        state["ef"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def _compress_int8(g: jax.Array, residual: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 quantization of one gradient tensor."""
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, gf - deq
+
+
+def cast_params(master: PyTree, specs: PyTree) -> PyTree:
+    """fp32 master -> model-dtype params (bf16 weights, fp32 norms)."""
+    return jax.tree_util.tree_map(
+        lambda m, sp: m.astype(sp.dtype), master, specs)
+
+
+def params_of(state: dict, model: Model) -> PyTree:
+    return cast_params(state["opt"]["master"], model.param_specs())
+
+
+def abstract_train_state(model: Model, cfg: TrainConfig) -> dict:
+    """ShapeDtypeStruct state for the dry-run (no allocation)."""
+    params = model.abstract()
+    zeros = jax.eval_shape(
+        lambda p: init_opt_state(cfg.optimizer, p), params)
+    return {"opt": zeros,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) on every leaf with a leading batch dim.
+
+    M-RoPE positions carry a leading (3,) axis before batch — handled by
+    splitting on axis 1 for rank-3 int32 'positions'."""
+    def split(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name == "positions" and x.ndim == 3:
+            return jnp.moveaxis(
+                x.reshape(x.shape[0], n, x.shape[1] // n, x.shape[2]), 1, 0)
+        return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+    return jax.tree_util.tree_map_with_path(split, batch)
+
+
+def make_train_step(model: Model, cfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    accum_dtype = jnp.dtype(cfg.accum_dtype)
+    specs = model.param_specs()
+
+    def loss_fn(master, mb):
+        params = cast_params(master, specs)
+        loss, parts = model.loss(params, mb, remat=cfg.remat)
+        return loss, parts
+
+    def step(state, batch):
+        master = state["opt"]["master"]
+        if cfg.accum_steps > 1:
+            mbs = _split_microbatches(batch, cfg.accum_steps)
+
+            def accum(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(master, mb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(accum_dtype), gacc, grads)
+                return (gacc, lacc + loss), None
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), master)
+            (gsum, lsum), _ = jax.lax.scan(
+                accum, (gzero, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / cfg.accum_steps, gsum)
+            loss = lsum / cfg.accum_steps
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(master, batch)
+
+        new_state = {}
+        if cfg.grad_compression == "int8":
+            pairs = jax.tree_util.tree_map(_compress_int8, grads,
+                                           state["ef"])
+            grads = jax.tree_util.tree_map(
+                lambda t: t[0], pairs,
+                is_leaf=lambda x: isinstance(x, tuple))
+            new_state["ef"] = jax.tree_util.tree_map(
+                lambda t: t[1], pairs,
+                is_leaf=lambda x: isinstance(x, tuple))
+
+        new_opt, om = apply_updates(cfg.optimizer, grads, state["opt"],
+                                    state["step"])
+        new_state.update(opt=new_opt, step=state["step"] + 1)
+        metrics = {"loss": loss, **om}
+        return new_state, metrics
+
+    return step

@@ -1,0 +1,11 @@
+"""Shared test config.  NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real single CPU device; only launch/dryrun.py forces 512."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")

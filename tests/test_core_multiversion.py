@@ -1,0 +1,108 @@
+"""Property tests for the single-pass multi-version compiler (Alg. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import schedule_space as ss
+from repro.core.multiversion import (V_MAX, compile_layer, extract_dominant)
+
+
+def _layer(m, k, n, it=4):
+    return cm.GemmLayer(name=f"g{m}x{k}x{n}", m=m, k=k, n=n, itemsize=it)
+
+
+@given(m=st.integers(8, 800), k=st.integers(8, 3000), n=st.integers(8, 800))
+@settings(max_examples=15, deadline=None)
+def test_pareto_frontier_properties(m, k, n):
+    hw = cm.CPU_3990X
+    vs = ss.enumerate_versions(_layer(m, k, n), hw)
+    dom = extract_dominant(vs)
+    assert dom, "frontier never empty"
+    # 1. no kept version dominated by ANY candidate
+    for d in dom:
+        for v in vs:
+            dominated = (v.parallelism >= d.parallelism
+                         and v.locality >= d.locality
+                         and (v.parallelism > d.parallelism
+                              or v.locality > d.locality))
+            assert not dominated, (d, v)
+    # 2. frontier is an antichain: sorted by locality => parallelism strictly
+    # decreasing
+    by_loc = sorted(dom, key=lambda v: v.locality)
+    for a, b in zip(by_loc, by_loc[1:]):
+        assert b.parallelism < a.parallelism or b.locality > a.locality
+
+
+@given(m=st.integers(16, 600), k=st.integers(64, 2500),
+       n=st.integers(16, 600))
+@settings(max_examples=15, deadline=None)
+def test_compile_layer_invariants(m, k, n):
+    hw = cm.CPU_3990X
+    vset = compile_layer(_layer(m, k, n), hw, qos_budget_s=5e-3)
+    # <= V versions, all on the frontier, table indexes valid
+    assert 1 <= len(vset.versions) <= V_MAX
+    assert len(vset.level_table) == cm.NUM_LEVELS
+    assert all(0 <= i < len(vset.versions) for i in vset.level_table)
+    # retention: kept-set envelope within 1/RETENTION of the full picked set
+    grid = cm.level_grid()
+    units = max(hw.n_units // 4, 1)
+    # solo selection is optimal at level 0 among kept
+    lats0 = [cm.latency(hw, v, units, grid[0]) for v in vset.versions]
+    assert vset.level_table[0] == int(np.argmin(lats0))
+
+
+def test_version_sets_sorted_and_monotone_tables():
+    hw = cm.CPU_3990X
+    from repro.configs.paper_suite import resnet50
+    for lay in resnet50()[:8]:
+        vset = compile_layer(lay, hw, qos_budget_s=1e-3)
+        tiles = [v.tile_bytes for v in vset.versions]
+        assert tiles == sorted(tiles)
+
+
+def test_interference_monotonicity_of_latency():
+    hw = cm.CPU_3990X
+    lay = _layer(196, 2304, 256)
+    vs = ss.enumerate_versions(lay, hw)
+    for v in vs[::17]:
+        lats = [cm.latency(hw, v, 16, itf) for itf in cm.level_grid()]
+        assert all(b >= a - 1e-12 for a, b in zip(lats, lats[1:])), \
+            "latency must be non-decreasing in interference level"
+
+
+def test_units_monotonicity_of_latency():
+    hw = cm.CPU_3990X
+    lay = _layer(512, 1024, 512)
+    v = ss.default_version(lay, hw)
+    lats = [cm.latency(hw, v, u, cm.Interference()) for u in (1, 2, 4, 8,
+                                                              16, 32, 64)]
+    assert all(b <= a + 1e-12 for a, b in zip(lats, lats[1:])), \
+        "latency must be non-increasing in units at zero interference"
+
+
+def test_crossover_exists_for_llc_bound_layer():
+    """The paper's Fig. 6 phenomenon: the solo winner must lose to an
+    interference-tolerant version at the top pressure level."""
+    hw = cm.CPU_3990X
+    from repro.configs.paper_suite import bert_large
+    lay = bert_large()[0]
+    vs = ss.enumerate_versions(lay, hw)
+    grid = cm.level_grid()
+    units = 16
+    best0 = min(vs, key=lambda v: cm.latency(hw, v, units, grid[0]))
+    best9 = min(vs, key=lambda v: cm.latency(hw, v, units, grid[-1]))
+    l0_at9 = cm.latency(hw, best0, units, grid[-1])
+    l9_at9 = cm.latency(hw, best9, units, grid[-1])
+    assert l9_at9 < l0_at9, "tolerant version must win at max interference"
+    degradation = l0_at9 / cm.latency(hw, best0, units, grid[0])
+    assert degradation > 2.0, f"solo winner must degrade (got {degradation:.1f}x)"
+
+
+def test_units_required_knee_fallback():
+    hw = cm.CPU_3990X
+    lay = _layer(64, 512, 64)
+    v = ss.default_version(lay, hw)
+    # infeasible budget: returns a sane knee, not n_units+1
+    u = cm.units_required(hw, v, 1e-9, cm.Interference())
+    assert 1 <= u <= hw.n_units

@@ -1,0 +1,106 @@
+"""Property tests: layer-block formation (Alg. 2), thresholds, proxy."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import layer_block as lb
+from repro.core.interference import (calibrate_proxy, pca_variance,
+                                     pressure_on, RunningDemand,
+                                     synthesize_counters)
+from repro.serving.tenants import paper_plan
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return paper_plan("resnet50", "cpu")
+
+
+def test_blocks_partition_layers(plan):
+    hw = cm.CPU_3990X
+    for thres in (0.0, 2.0, 8.0, 32.0, 1e9):
+        blocks = lb.form_blocks(plan, hw, cm.Interference(), thres)
+        # exact partition of [0, N)
+        assert blocks[0].start == 0
+        assert blocks[-1].end == plan.n_layers
+        for a, b in zip(blocks, blocks[1:]):
+            assert a.end == b.start
+        # budgets partition the model QoS
+        assert np.isclose(sum(b.budget_s for b in blocks), plan.qos_s)
+        # every block respects the unit cap (within avg + thres)
+        cap = min(int(plan.avg_units + thres) if thres < hw.n_units
+                  else hw.n_units, hw.n_units)
+        for b in blocks:
+            assert 1 <= b.units <= max(cap, 1)
+
+
+def test_higher_threshold_fewer_blocks(plan):
+    hw = cm.CPU_3990X
+    counts = [len(lb.form_blocks(plan, hw, cm.Interference(), t))
+              for t in (0.0, 4.0, 16.0, 64.0)]
+    assert counts == sorted(counts, reverse=True)
+    # infinite threshold => model-wise (single block)
+    assert len(lb.form_blocks(plan, hw, cm.Interference(), 1e9)) == 1
+
+
+def test_finding_first_pivot():
+    reqs = [10, 12, 30, 9, 9, 40, 11]
+    assert lb.finding_first_pivot(reqs, avg_c=12, thres=5.0, start=0) == 2
+    assert lb.finding_first_pivot(reqs, avg_c=12, thres=5.0, start=2) == 5
+    assert lb.finding_first_pivot(reqs, avg_c=50, thres=50.0, start=0) == 7
+
+
+def test_block_units_meet_budget_when_feasible(plan):
+    hw = cm.CPU_3990X
+    itf = cm.Interference()
+    blocks = lb.form_blocks(plan, hw, itf, thres=16.0)
+    for b in blocks:
+        lat = b.latency(hw, b.units, itf)
+        cap = int(plan.avg_units + 16.0)
+        if b.units < cap:   # interior solution must meet its budget
+            assert lat <= b.budget_s * 1.001
+
+
+def test_avg_units_is_layer_mean(plan):
+    hw = cm.CPU_3990X
+    mean = sum(min(u, hw.n_units) for u in plan.layer_units) \
+        / len(plan.layer_units)
+    assert plan.avg_units == max(1, round(mean))
+
+
+# --------------------------------------------------------------------------
+# Interference proxy (paper Fig. 11)
+# --------------------------------------------------------------------------
+def test_proxy_accuracy_and_pca():
+    hw = cm.CPU_3990X
+    proxy, counters, levels = calibrate_proxy(hw, n=512)
+    assert proxy.r2 > 0.95, f"proxy R2 too low: {proxy.r2}"
+    var = pca_variance(counters[:, :2])
+    # L3 counters dominate the variance (Fig. 11a: >99% with distractors)
+    var_all = pca_variance(counters)
+    assert var_all[0] + var_all[1] > 0.8
+
+
+def test_pressure_on_excludes_self_and_soon_done():
+    d = [RunningDemand(tenant=1, bw=0.4, cache=0.5, ici=0.0, start=0.0,
+                       finish=10.0),
+         RunningDemand(tenant=2, bw=0.3, cache=0.2, ici=0.0, start=0.0,
+                       finish=10.0),
+         RunningDemand(tenant=3, bw=0.2, cache=0.2, ici=0.0, start=0.0,
+                       finish=1.0)]
+    # at t=0.95 tenant-3's chunk is >90% done -> excluded
+    itf = pressure_on(1, d, now=0.95)
+    assert np.isclose(itf.bw, 0.3) and np.isclose(itf.cache, 0.2)
+    itf2 = pressure_on(1, d, now=0.5)
+    assert np.isclose(itf2.bw, 0.5) and np.isclose(itf2.cache, 0.4)
+
+
+def test_interference_level_roundtrip():
+    for x in (0.0, 0.3, 0.7, 1.0):
+        itf = cm.Interference.from_level(x)
+        assert abs(itf.level - x) < 1e-9
+    assert cm.level_to_idx(0.0) == 0
+    assert cm.level_to_idx(1.0) == cm.NUM_LEVELS - 1
+    # grid/index round trip
+    for i in range(cm.NUM_LEVELS):
+        assert cm.level_to_idx(cm.grid_point(i)) == i

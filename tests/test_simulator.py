@@ -1,0 +1,105 @@
+"""Simulator invariants + policy behaviour on small workloads."""
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core.scheduler import (FixedBlockPolicy, LayerWisePolicy,
+                                  ModelWisePolicy, PremaPolicy,
+                                  VeltairPolicy)
+from repro.serving import (SimConfig, Simulator, build_paper_plans,
+                           poisson_workload, uniform_workload)
+
+HW = cm.CPU_3990X
+
+
+@pytest.fixture(scope="module")
+def plans():
+    return build_paper_plans(["resnet50", "googlenet"], HW)
+
+
+ALL_POLICIES = [
+    lambda: ModelWisePolicy(HW),
+    lambda: LayerWisePolicy(HW),
+    lambda: FixedBlockPolicy(HW, 6),
+    lambda: VeltairPolicy(HW),
+    lambda: VeltairPolicy(HW, adaptive_compile=False),
+    lambda: VeltairPolicy(HW, adaptive_schedule=False),
+    lambda: PremaPolicy(HW),
+]
+
+
+@pytest.mark.parametrize("pf", ALL_POLICIES)
+def test_conservation_every_query_finishes(plans, pf):
+    wl = poisson_workload(["resnet50", "googlenet"], 60, 120, seed=2)
+    sim = Simulator(HW, plans, pf())
+    m = sim.run(wl)
+    assert len(sim.records) == len(wl), "every query must complete"
+    assert sim.pool.free == sim.pool.total, "all units returned"
+    assert not sim.running and not sim.pending and not sim.active
+    assert m.qos_rate >= 0.0 and m.avg_latency_s > 0
+
+
+def test_latency_increases_with_load(plans):
+    lat = []
+    for qps in (30, 120, 240):
+        sim = Simulator(HW, plans, VeltairPolicy(HW))
+        m = sim.run(poisson_workload(["resnet50"], qps, 150, seed=3))
+        lat.append(m.avg_latency_s)
+    assert lat[0] <= lat[1] <= lat[2]
+
+
+def test_prema_is_temporal_single_tenant(plans):
+    """PREMA runs one task at a time on the whole machine."""
+    sim = Simulator(HW, plans, PremaPolicy(HW))
+    orig = Simulator._try_start
+    max_used = [0]
+
+    def spy(self, task, now, events):
+        r = orig(self, task, now, events)
+        tenants = {c.task.tid for c in self.running}
+        assert len(tenants) <= 1
+        max_used[0] = max(max_used[0], self.pool.used)
+        return r
+    Simulator._try_start = spy
+    try:
+        sim.run(uniform_workload("resnet50", 40, 40))
+    finally:
+        Simulator._try_start = orig
+    assert max_used[0] == HW.n_units
+
+
+def test_straggler_mitigation_counts():
+    plans = build_paper_plans(["googlenet"], HW)
+    sim = Simulator(HW, plans, VeltairPolicy(HW),
+                    SimConfig(straggler_prob=0.2, straggler_slowdown=10.0,
+                              straggler_factor=3.0, seed=7))
+    m = sim.run(poisson_workload(["googlenet"], 40, 120, seed=4))
+    assert sim.stragglers > 0, "straggler path must trigger"
+    assert len(sim.records) == 120
+
+
+def test_veltair_beats_static_on_heavy_mix():
+    """The paper's headline direction: FULL > layer-wise(Planaria-ish) and
+    model-wise under the heavy workload class."""
+    from repro.configs.paper_suite import paper_models, WORKLOAD_CLASSES
+    pm = paper_models()
+    models = list(WORKLOAD_CLASSES["heavy"])
+    plans = build_paper_plans(models, HW)
+    weights = [1.0 / pm[m].qos_ms for m in models]
+    wl = poisson_workload(models, 14, 250, seed=1, weights=weights)
+
+    def rate(pf):
+        return Simulator(HW, plans, pf).run(wl).qos_rate
+
+    full = rate(VeltairPolicy(HW))
+    lw = rate(LayerWisePolicy(HW))
+    mw = rate(ModelWisePolicy(HW))
+    assert full > lw, f"FULL {full} must beat layer-wise {lw}"
+    assert full > mw, f"FULL {full} must beat model-wise {mw}"
+
+
+def test_upgrade_mechanism_recovers_units(plans):
+    """grow-on-free: chunks started below minimum get topped up."""
+    sim = Simulator(HW, plans, LayerWisePolicy(HW))
+    sim.run(poisson_workload(["resnet50"], 250, 200, seed=5))
+    assert sim.conflicts > 0               # under pressure there are some
+    assert sim.pool.free == sim.pool.total

@@ -1,0 +1,41 @@
+"""TPU-pod serving path: LM-arch tenants on the v5e pod hardware spec."""
+from repro.core import cost_model as cm
+from repro.core.scheduler import ModelWisePolicy, VeltairPolicy
+from repro.serving import Simulator, lm_serving_plans, poisson_workload
+
+
+def test_lm_plans_compile_and_serve():
+    plans = lm_serving_plans([("gemma-2b", "decode_32k", 40.0),
+                              ("mamba2-780m", "decode_32k", 25.0)])
+    hw = cm.TPU_V5E_POD
+    for p in plans.values():
+        assert p.n_layers > 0
+        assert 1 <= p.avg_units <= hw.n_units
+        assert all(len(vs.versions) >= 1 for vs in p.version_sets)
+    names = list(plans)
+    wl = poisson_workload(names, 40, 150, seed=0)
+    m = Simulator(hw, plans, VeltairPolicy(hw)).run(wl)
+    assert m.qos_rate > 0.9
+    m2 = Simulator(hw, plans, ModelWisePolicy(hw)).run(wl)
+    assert m.qos_rate >= m2.qos_rate
+
+
+def test_tpu_cost_model_has_collective_term():
+    from repro.configs import get_config, get_shape
+    from repro.core.profiles import lm_layers
+    from repro.core.schedule_space import enumerate_versions
+    hw = cm.TPU_V5E_POD
+    lay = lm_layers(get_config("gemma-2b"), get_shape("decode_32k"))[0]
+    import dataclasses
+    v = enumerate_versions(lay, hw)[0]
+    itf0 = cm.Interference()
+    # HBM pressure slows decode (memory-bound) latency
+    itf_bw = cm.Interference(bw=2.0)
+    assert cm.latency(hw, v, 8, itf_bw) > cm.latency(hw, v, 8, itf0)
+    # ICI pressure slows comm-heavy versions (TP all-reduce dominated)
+    v_comm = dataclasses.replace(v, comm_bytes_per_unit=1e9)
+    itf_ici = cm.Interference(ici=2.0)
+    assert cm.latency(hw, v_comm, 8, itf_ici) \
+        > cm.latency(hw, v_comm, 8, itf0)
+    # and the emitted link demand is nonzero for multi-chip placements
+    assert cm.ici_demand(hw, v_comm, 8) > 0

@@ -1,0 +1,73 @@
+"""Online-serving benchmark: the real JAX engine with the VELTAIR policy
+in the loop (repro.serving.runtime).
+
+Sections:
+  * online/<policy>_step_us      mean engine decode-step wall time while
+                                 serving the mix under that policy
+  * online/<policy>_qos          QoS rate of the replay (derived column)
+  * online/level_switch_us       cost of set_interference_level when the
+                                 level (and therefore the tile overrides)
+                                 actually changes, xla dispatch mode
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import HW, emit
+from repro.core.scheduler import ModelWisePolicy, VeltairPolicy
+from repro.serving import (OnlineRuntime, Workload, build_paper_plans,
+                           engine_version_sets)
+
+TENANTS = ["resnet50", "googlenet"]
+N_QUERIES = 24
+
+
+def _engine(plans):
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_reduced_config("gemma-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return ServingEngine(cfg, params, batch_slots=2, max_len=32,
+                         version_sets=engine_version_sets(plans))
+
+
+def online_policies(plans):
+    wl = Workload.poisson(TENANTS, 60, N_QUERIES, prompt_len=4,
+                          max_new_tokens=4, seed=1)
+    for name, policy in (("veltair", VeltairPolicy(HW)),
+                         ("model_wise", ModelWisePolicy(HW))):
+        engine = _engine(plans)
+        runtime = OnlineRuntime(engine, policy, plans, HW)
+        t0 = time.time()
+        m = runtime.serve(wl)
+        wall = time.time() - t0
+        emit(f"online/{name}_step_us",
+             wall * 1e6 / max(runtime.steps, 1),
+             f"qos={m.qos_rate:.2f};switches={engine.level_switches}")
+
+
+def level_switch_cost(plans):
+    engine = _engine(plans)
+    engine.set_interference_level(0.0)
+    t0 = time.time()
+    n = 200
+    for i in range(n):
+        engine.set_interference_level(float(i % 2))  # always a real switch
+    emit("online/level_switch_us", (time.time() - t0) * 1e6 / n,
+         f"switches={engine.level_switches}")
+
+
+def run_all():
+    plans = build_paper_plans(TENANTS, HW)
+    online_policies(plans)
+    level_switch_cost(plans)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run_all()

@@ -18,10 +18,12 @@ def main() -> None:
 
     from benchmarks import bench_figures as F
     from benchmarks import bench_kernels as K
+    from benchmarks import bench_online_serving as O
 
     t0 = time.time()
     print("name,us_per_call,derived")
     K.run_all()
+    O.run_all()
     F.fig4_core_scaling()
     F.fig6_multiversion()
     F.fig7_version_count()

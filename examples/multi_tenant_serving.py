@@ -1,35 +1,30 @@
 """Flagship example: multi-tenant serving with VELTAIR vs baselines.
 
-    PYTHONPATH=src python examples/multi_tenant_serving.py
+    PYTHONPATH=src python examples/multi_tenant_serving.py [--no-online]
 
-Compiles multi-version plans for the paper's MLPerf mix, then serves a
-Poisson query stream under every scheduling policy and prints the QoS
-table (Fig. 12-style).  All scheduling decisions run the production
-repro.core code; time advancement is simulated (this container has one
-CPU device — see DESIGN.md §2, measurement substrate).
+Part 1 (simulator): compiles multi-version plans for the paper's MLPerf
+mix, then serves a Poisson query stream under every scheduling policy and
+prints the QoS table (Fig. 12-style).  All scheduling decisions run the
+production repro.core code; time advancement is simulated.
+
+Part 2 (online runtime): replays one tenant mix through the *real* JAX
+ServingEngine with the VELTAIR policy in the loop — every engine step the
+policy's proxy-predicted interference level swaps the active kernel code
+version (tile overrides via repro.kernels.dispatch) — and prints the
+engine-vs-simulator ServingMetrics side by side.
 """
+import argparse
 import time
 
 from repro.configs.paper_suite import WORKLOAD_CLASSES, paper_models
 from repro.core import cost_model as cm
+from repro.core.qos import compare_metrics
 from repro.core.scheduler import (LayerWisePolicy, ModelWisePolicy,
                                   PremaPolicy, VeltairPolicy)
 from repro.serving import Simulator, build_paper_plans, poisson_workload
 
 
-def main():
-    hw = cm.CPU_3990X
-    pm = paper_models()
-    models = list(WORKLOAD_CLASSES["mix"])
-    print(f"compiling multi-version plans for {len(models)} tenants ...")
-    t0 = time.time()
-    plans = build_paper_plans(models, hw)
-    print(f"  done in {time.time()-t0:.1f}s; per-model versions: "
-          + ", ".join(
-          f"{n}={sum(len(v.versions) for v in p.version_sets)}"
-          for n, p in plans.items()))
-
-    weights = [1.0 / pm[m].qos_ms for m in models]
+def sim_policy_table(hw, plans, models, weights):
     policies = [
         ("model-wise FCFS", lambda: ModelWisePolicy(hw)),
         ("layer-wise (Planaria-ported)", lambda: LayerWisePolicy(hw)),
@@ -47,6 +42,70 @@ def main():
             m = Simulator(hw, plans, pf()).run(wl)
             rates.append(m.qos_rate)
         print(f"{name:32s} " + " ".join(f"{r:.2f}    " for r in rates))
+
+
+def online_engine_demo(hw):
+    """The real JAX engine under VeltairPolicy: one tenant mix replayed
+    through simulator AND engine, metrics side by side."""
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+    from repro.serving import (OnlineRuntime, Workload,
+                               engine_version_sets,
+                               replay_through_simulator)
+    from repro.serving.engine import ServingEngine
+
+    tenants = ["resnet50", "googlenet"]
+    plans = build_paper_plans(tenants, hw)
+    policy = VeltairPolicy(hw)
+
+    cfg = get_reduced_config("gemma-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, batch_slots=2, max_len=32,
+                           version_sets=engine_version_sets(plans))
+
+    wl = Workload.poisson(tenants, 60, 24, prompt_len=4, max_new_tokens=4,
+                          seed=1)
+    t0 = time.time()
+    runtime = OnlineRuntime(engine, policy, plans, hw)
+    m_eng = runtime.serve(wl)
+    wall = time.time() - t0
+    m_sim = replay_through_simulator(wl, hw, plans, VeltairPolicy(hw))
+
+    lv = runtime.level_trace
+    print(f"\nonline runtime: {m_eng.n_queries} queries through the real "
+          f"engine in {wall:.1f}s wall ({runtime.steps} decode steps, "
+          f"{engine.level_switches} version switches, interference level "
+          f"{min(lv):.2f}..{max(lv):.2f})")
+    print(f"{'metric':18s} {'simulator':>12s} {'engine':>12s}")
+    for field, (a, b) in compare_metrics(m_sim, m_eng).items():
+        print(f"{field:18s} {a:12.4f} {b:12.4f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-online", action="store_true",
+                    help="skip the real-engine replay (simulator only)")
+    args = ap.parse_args()
+
+    hw = cm.CPU_3990X
+    pm = paper_models()
+    models = list(WORKLOAD_CLASSES["mix"])
+    print(f"compiling multi-version plans for {len(models)} tenants ...")
+    t0 = time.time()
+    plans = build_paper_plans(models, hw)
+    print(f"  done in {time.time()-t0:.1f}s; per-model versions: "
+          + ", ".join(
+          f"{n}={sum(len(v.versions) for v in p.version_sets)}"
+          for n, p in plans.items()))
+
+    weights = [1.0 / pm[m].qos_ms for m in models]
+    sim_policy_table(hw, plans, models, weights)
+
+    if not args.no_online:
+        online_engine_demo(hw)
 
 
 if __name__ == "__main__":

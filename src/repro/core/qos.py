@@ -32,6 +32,7 @@ class ServingMetrics:
     conflict_rate: float
     avg_units: float                # mean units used by running queries
     unit_efficiency: float          # useful busy-time / allocated unit-time
+    n_queries: int = 0              # completed queries behind these numbers
 
 
 def summarize(records: list[QueryRecord], qps_offered: float,
@@ -54,7 +55,16 @@ def summarize(records: list[QueryRecord], qps_offered: float,
         conflict_rate=conflict_rate,
         avg_units=float(avg_units),
         unit_efficiency=float(eff),
+        n_queries=len(records),
     )
+
+
+def compare_metrics(a: ServingMetrics,
+                    b: ServingMetrics) -> dict[str, tuple[float, float]]:
+    """Field-by-field (a, b) pairs — side-by-side comparison of the same
+    workload replayed through the simulator and the real engine."""
+    return {f.name: (getattr(a, f.name), getattr(b, f.name))
+            for f in dataclasses.fields(ServingMetrics)}
 
 
 def qps_at_qos(sweep: list[tuple[float, ServingMetrics]],

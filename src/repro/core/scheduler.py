@@ -77,6 +77,13 @@ class Policy:
                       now: float) -> list[TaskState]:
         return sorted(pending, key=lambda t: t.arrival)
 
+    def online_level(self, demands: list[RunningDemand],
+                     now: float) -> float:
+        """Interference level the online serving engine should compile for
+        right now (repro.serving.runtime queries this every engine step).
+        Static baselines never leave the solo-tuned code version."""
+        return 0.0
+
 
 class VeltairPolicy(Policy):
     """The full adaptive compiler+scheduler (paper Alg. 3)."""
@@ -95,7 +102,11 @@ class VeltairPolicy(Policy):
 
     def _predicted_itf(self, task: TaskState, demands: list[RunningDemand],
                        now: float) -> cm.Interference:
-        truth = pressure_on(task.tid, demands, now, exclude_soon_done=True)
+        return self._predict_pressure(task.tid, demands, now)
+
+    def _predict_pressure(self, tid: int, demands: list[RunningDemand],
+                          now: float) -> cm.Interference:
+        truth = pressure_on(tid, demands, now, exclude_soon_done=True)
         counters = synthesize_counters(self.hw, truth, self.rng)
         if self.hw.cache_shared:
             return self.proxy.predict_interference(counters[:2])
@@ -104,6 +115,13 @@ class VeltairPolicy(Policy):
         pred = self.proxy.predict_interference(counters[:2])
         return cm.Interference(cache=0.0, bw=pred.bw,
                                ici=min(truth.ici, 4.0))
+
+    def online_level(self, demands, now):
+        if not self.adaptive_compile:
+            return 0.0        # VELTAIR-AS serves the solo-tuned version
+        # tid=-1 matches no running demand, so the proxy sees the full
+        # co-runner pressure — the engine itself is the "victim"
+        return self._predict_pressure(-1, demands, now).level
 
     def _threshold(self, task: TaskState, active: list[TaskState]) -> float:
         total_avg = sum(t.plan.avg_units for t in active) or 1

@@ -1,0 +1,2 @@
+"""Distributed-execution support: logical-axis sharding rules, optimizer
+state sharding, and pod-scale fault tolerance primitives."""

@@ -1,0 +1,42 @@
+"""Pod-scale fault tolerance primitives: worker heartbeats + straggler
+detection (the serving simulator charges the same bounded detect+redo
+cost; see serving.simulator straggler mitigation)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+class HeartbeatMonitor:
+    """Tracks worker liveness from periodic beats; ``sweep`` evicts
+    workers whose last beat is older than the deadline."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline_s = deadline_s
+        self._last: dict[int, float] = {}
+
+    def beat(self, worker: int, now: float) -> None:
+        self._last[worker] = now
+
+    def sweep(self, now: float) -> list[int]:
+        """Evict and return workers that missed the deadline."""
+        dead = sorted(w for w, t in self._last.items()
+                      if now - t > self.deadline_s)
+        for w in dead:
+            del self._last[w]
+        return dead
+
+    def alive(self) -> list[int]:
+        return sorted(self._last)
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerPolicy:
+    """A chunk exceeding ``factor`` x its predicted latency is a straggler;
+    the redo cost is the full detection window plus one re-execution."""
+    factor: float = 4.0
+
+    def is_straggler(self, predicted_s: float, elapsed_s: float) -> bool:
+        return elapsed_s > self.factor * predicted_s
+
+    def redo_cost(self, predicted_s: float) -> float:
+        return self.factor * predicted_s + predicted_s

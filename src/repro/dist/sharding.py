@@ -1,0 +1,195 @@
+"""Logical-axis -> mesh-axis sharding rules and pspec derivation.
+
+Models declare *logical* axes on every tensor (repro.models.params); a
+:class:`RuleSet` maps those names onto mesh axes for one execution mode.
+``pspec_for`` turns (shape, axes, rules, mesh) into a ``PartitionSpec``,
+enforcing:
+
+  * divisibility — a mesh axis whose size does not divide the dim is not
+    used (a tuple rule keeps the longest prefix whose product divides);
+  * single use — each mesh axis appears at most once per spec;
+  * GQA TP fallback — when a tensor-parallel (scalar) rule exists but the
+    dim cannot shard over it (e.g. kv_heads=8 on model=16), the whole
+    tensor falls back to plain data-parallel sharding: the model axis is
+    everywhere replicated and only data-family axes survive, collapsed to
+    their scalar form.
+
+``hint`` is the in-model annotation point: a no-op outside a
+``use_rules`` context, a ``with_sharding_constraint`` inside one — so the
+same model code runs unsharded on one CPU device and sharded on the pod.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _is_param_spec(x) -> bool:
+    # structural check: repro.models imports this module, so importing
+    # ParamSpec here would be circular
+    return hasattr(x, "axes") and hasattr(x, "shape") and hasattr(x, "dtype")
+
+
+# data-family mesh axes (pure replication of the batch): the GQA fallback
+# keeps these and drops tensor-parallel axes
+DATA_AXES = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleSet:
+    """One mode's rule tables: ``params`` for weights/optimizer state,
+    ``acts`` for activations and caches."""
+    name: str
+    params: dict[str, Any]
+    acts: dict[str, Any]
+
+
+def make_rules(mode: str, multi_pod: bool = False,
+               seq_parallel: bool = False) -> RuleSet:
+    """Rule tables for ``mode`` in {"train", "serve"}.
+
+    Weights: FSDP over the data family + tensor parallel over "model".
+    Activations: batch over the data family; logits vocab over "model".
+    ``seq_parallel`` additionally shards activation/cache sequence axes
+    over "model" (context-parallel decode for kv_heads=1 archs, where the
+    model axis is otherwise idle)."""
+    params = {
+        "embed": ("pod", "data"),
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "expert": "model",
+        "kv_lora": "model",
+        "inner": "model",
+    }
+    acts = {
+        "batch": ("pod", "data"),
+        "groups": ("pod", "data"),
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "expert": "model",
+    }
+    if seq_parallel:
+        acts["seq"] = "model"
+    _ = multi_pod  # the "pod" axis is simply absent from single-pod meshes
+    return RuleSet(name=mode, params=params, acts=acts)
+
+
+def _axis_size(mesh, name: str) -> int | None:
+    try:
+        return mesh.shape[name]
+    except (KeyError, TypeError):
+        return None
+
+
+def pspec_for(shape: tuple[int, ...], axes: tuple, rules: dict,
+              mesh) -> P:
+    """PartitionSpec for one tensor under ``rules`` on ``mesh``."""
+    entries: list = []
+    used: set[str] = set()
+    tp_dropped = False
+    for dim, ax in zip(shape, axes):
+        rule = rules.get(ax) if ax is not None else None
+        if rule is None:
+            entries.append(None)
+            continue
+        if isinstance(rule, str):
+            size = _axis_size(mesh, rule)
+            if size and rule not in used and dim % size == 0:
+                entries.append(rule)
+                used.add(rule)
+            else:
+                entries.append(None)
+                if size and rule not in used:
+                    tp_dropped = True       # axis exists but cannot divide
+        else:                               # tuple rule: product sharding
+            sel: list[str] = []
+            prod = 1
+            for r in rule:
+                size = _axis_size(mesh, r)
+                if not size or r in used:
+                    continue
+                if dim % (prod * size) != 0:
+                    break                   # drop trailing axes
+                sel.append(r)
+                prod *= size
+            used.update(sel)
+            entries.append(tuple(sel) if sel else None)
+    if tp_dropped:
+        # GQA TP fallback: replicate over the unusable tensor-parallel
+        # axis; keep only data-family sharding, in scalar form.
+        out: list = []
+        for e in entries:
+            if isinstance(e, tuple):
+                kept = [a for a in e if a in DATA_AXES]
+                e = kept[0] if len(kept) == 1 else (tuple(kept) or None)
+            elif e is not None and e not in DATA_AXES:
+                e = None
+            out.append(e)
+        entries = out
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_pspecs(specs, rules: RuleSet, mesh):
+    """PartitionSpec tree for a ParamSpec tree under the params rules."""
+    return jax.tree_util.tree_map(
+        lambda s: pspec_for(s.shape, s.axes, rules.params, mesh),
+        specs, is_leaf=_is_param_spec)
+
+
+def shardings_of(pspecs, mesh):
+    """NamedSharding tree from a PartitionSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, ps),
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+
+
+def device_bytes(pspecs, specs, mesh) -> int:
+    """Total per-device parameter bytes under the given pspecs."""
+    ps_leaves = jax.tree_util.tree_leaves(
+        pspecs, is_leaf=lambda x: isinstance(x, P))
+    sp_leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_param_spec)
+    total = 0
+    for ps, sp in zip(ps_leaves, sp_leaves):
+        shards = 1
+        for entry in ps:
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                if a is not None:
+                    shards *= mesh.shape[a]
+        total += sp.size * jnp.dtype(sp.dtype).itemsize // shards
+    return total
+
+
+# --------------------------------------------------------------------------
+# hint: in-model sharding annotations
+# --------------------------------------------------------------------------
+_ACTIVE: list[tuple[Any, RuleSet]] = []
+
+
+@contextlib.contextmanager
+def use_rules(mesh, rules: RuleSet):
+    """Activate (mesh, rules) so ``hint`` becomes a sharding constraint."""
+    _ACTIVE.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def hint(x: jax.Array, axes: tuple) -> jax.Array:
+    """Constrain ``x`` to the active rules' sharding; no-op outside a
+    ``use_rules`` context (single-device smoke tests, serving engine)."""
+    if not _ACTIVE:
+        return x
+    mesh, rules = _ACTIVE[-1]
+    spec = pspec_for(x.shape, axes, rules.acts, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

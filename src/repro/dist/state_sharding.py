@@ -1,0 +1,55 @@
+"""Optimizer-state ParamSpecs (for dry-run sharding without allocation).
+
+Mirrors ``repro.training.optimizer.init_opt_state`` structurally: every
+state tensor inherits its parameter's logical axes, so FSDP/TP rules
+apply transparently.  Adafactor's factored statistics drop the reduced
+axis (vr drops the last, vc the second-to-last)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+from repro.training.optimizer import OptimizerConfig, _factored
+
+PyTree = Any
+
+
+def _f32(spec: ParamSpec) -> ParamSpec:
+    return ParamSpec(spec.shape, jnp.float32, spec.axes, init="zeros")
+
+
+def _map(specs: PyTree, fn) -> PyTree:
+    return jax.tree_util.tree_map(
+        fn, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def opt_state_specs(cfg: OptimizerConfig, param_specs: PyTree) -> dict:
+    """ParamSpec tree matching ``init_opt_state(cfg, params)``."""
+    master = _map(param_specs, _f32)
+    if cfg.name == "adafactor":
+        def stat(sp: ParamSpec):
+            if _factored(sp.shape, cfg.min_dim_factored):
+                return {
+                    "vr": ParamSpec(sp.shape[:-1], jnp.float32,
+                                    sp.axes[:-1], init="zeros"),
+                    "vc": ParamSpec(sp.shape[:-2] + sp.shape[-1:],
+                                    jnp.float32,
+                                    sp.axes[:-2] + sp.axes[-1:],
+                                    init="zeros"),
+                }
+            return {"v": _f32(sp)}
+        return {"stats": _map(param_specs, stat), "master": master}
+    return {"mu": _map(param_specs, _f32), "nu": _map(param_specs, _f32),
+            "master": master}
+
+
+def train_state_specs(cfg: OptimizerConfig, param_specs: PyTree) -> dict:
+    """ParamSpec tree matching ``init_train_state`` (sans error-feedback:
+    the dry-run never lowers int8 gradient compression)."""
+    return {
+        "opt": opt_state_specs(cfg, param_specs),
+        "step": ParamSpec((), jnp.int32, (), init="zeros"),
+    }

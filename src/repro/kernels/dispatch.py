@@ -47,6 +47,12 @@ def tile_overrides(op: str) -> dict:
     return dict(_TILE_OVERRIDES.get(op, {}))
 
 
+def all_tile_overrides() -> dict[str, dict]:
+    """Snapshot of every installed override (observability: the online
+    runtime's tests assert the engine's level switches land here)."""
+    return {op: dict(kw) for op, kw in _TILE_OVERRIDES.items()}
+
+
 def _ref_matmul(x, w):
     return jnp.einsum("...m,mf->...f", x, w)
 

@@ -1,10 +1,14 @@
 from repro.serving.simulator import SimConfig, Simulator, run_sweep
 from repro.serving.request import (poisson_workload, qos_inverse_weights,
-                                   uniform_workload)
-from repro.serving.tenants import build_paper_plans, lm_serving_plans
+                                   synth_prompts, uniform_workload)
+from repro.serving.runtime import (OnlineRuntime, Workload, plan_demand,
+                                   replay_through_simulator)
+from repro.serving.tenants import (build_paper_plans, engine_version_sets,
+                                   lm_serving_plans)
 
 __all__ = [
     "SimConfig", "Simulator", "run_sweep", "poisson_workload",
-    "qos_inverse_weights", "uniform_workload", "build_paper_plans",
-    "lm_serving_plans",
+    "qos_inverse_weights", "uniform_workload", "synth_prompts",
+    "OnlineRuntime", "Workload", "plan_demand", "replay_through_simulator",
+    "build_paper_plans", "engine_version_sets", "lm_serving_plans",
 ]

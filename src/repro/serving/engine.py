@@ -6,10 +6,17 @@ steps run the whole batch, finished rows free their slots.  This is the
 engine the examples drive on CPU with reduced models; at pod scale the
 same functions are jitted with the serve-mode shardings (launch/serve.py).
 
-The VELTAIR integration point: ``set_interference_level`` switches the
-active kernel tile overrides (repro.kernels.dispatch) to the version the
-adaptive compiler selected — the engine is oblivious to how the level was
-derived.
+The VELTAIR integration point: ``set_interference_level`` installs the
+kernel tile overrides (repro.kernels.dispatch.set_tile_overrides) of the
+code version the adaptive compiler selected for that pressure — either
+from a compiled ``VersionSet`` (the multi-version tables of an analytical
+ModelPlan) or from the built-in level table, which shrinks tiles as
+pressure rises (locality -> parallelism, paper Fig. 6/9).  The engine is
+oblivious to how the level was derived; repro.serving.runtime queries the
+scheduling policy for it every step.  In "interpret"/"pallas" dispatch
+modes a level change re-jits prefill/decode so the new tiling is actually
+traced in; in "xla" mode the overrides are installed but the reference
+path ignores them.
 """
 from __future__ import annotations
 
@@ -20,7 +27,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import cost_model as cm
+from repro.kernels import dispatch
 from repro.models.model import Model, build_model
+
+# Built-in interference-level -> tile table (one entry per grid level).
+# Low pressure: big tiles, maximal reuse of the shared cache; high
+# pressure: small private-cache-resident tiles that cede the LLC.
+_LEVEL_TILE_SIZES = (256, 224, 192, 160, 128, 112, 96, 80, 64, 48)
+DEFAULT_LEVEL_TILES = tuple(
+    {"matmul": {"bm": s, "bk": 2 * s, "bn": s},
+     "attention": {"bq": max(s, 64), "bkv": max(2 * s, 128)}}
+    for s in _LEVEL_TILE_SIZES)
+assert len(DEFAULT_LEVEL_TILES) == cm.NUM_LEVELS
 
 
 @dataclasses.dataclass
@@ -34,7 +53,8 @@ class Request:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 version_sets: list | None = None):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.params = params
@@ -44,10 +64,52 @@ class ServingEngine:
         self.cache = self.model.init_cache(batch_slots, max_len)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)
+        # adaptive-compilation state: tiles come from the dominant layer's
+        # multi-version table when one is supplied, else the default table
+        self.version_sets = version_sets
+        self._tile_source = (max(version_sets,
+                                 key=lambda vs: vs.solo_version().flops)
+                             if version_sets else None)
+        self.interference_level = 0.0
+        self._active_tiles: dict | None = None
+        self.level_switches = 0           # re-jit count (observability)
+        self._make_jits()
+
+    def _make_jits(self):
+        cfg = self.cfg
         self._decode = jax.jit(self.model.decode_step)
         self._prefill_one = jax.jit(
             lambda p, toks, cache: build_model(cfg).prefill(
                 p, {"tokens": toks}, cache))
+
+    # ------------------------------------------------------------------
+    def set_interference_level(self, level: float) -> dict:
+        """Switch the active code version to the one compiled for
+        ``level`` (0.0 = solo .. 1.0 = heavy co-location).
+
+        Installs the matching kernel tile overrides through
+        repro.kernels.dispatch; when the overrides actually change under a
+        Pallas dispatch mode, the jitted prefill/decode are rebuilt so the
+        next call traces with the new tiling.  Returns the installed
+        override dict (observability / tests)."""
+        itf = cm.Interference.from_level(level)
+        if self._tile_source is not None:
+            v = self._tile_source.select(itf)
+            tiles = {"matmul": {"bm": int(v.bm), "bk": int(v.bk),
+                                "bn": int(v.bn)}}
+        else:
+            tiles = DEFAULT_LEVEL_TILES[cm.level_to_idx(itf.level)]
+        if tiles != self._active_tiles:
+            for op, kw in tiles.items():
+                dispatch.set_tile_overrides(op, **kw)
+            if dispatch.get_mode() != "xla":
+                # prefill may already be traced (add_request runs before
+                # the first level is set), so every change must retrace
+                self._make_jits()
+            self._active_tiles = tiles
+            self.level_switches += 1
+        self.interference_level = itf.level
+        return {op: dict(kw) for op, kw in tiles.items()}
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> int | None:

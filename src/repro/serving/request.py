@@ -35,3 +35,11 @@ def uniform_workload(model: str, qps: float,
 
 def qos_inverse_weights(qos_ms: dict[str, float]) -> list[float]:
     return [1.0 / qos_ms[m] for m in qos_ms]
+
+
+def synth_prompts(n: int, prompt_len: int, vocab_size: int,
+                  seed: int = 0) -> np.ndarray:
+    """(n, prompt_len) int32 prompts — deterministic per seed, so a
+    Workload replays identically through simulator and engine."""
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab_size, (n, prompt_len)).astype(np.int32)

@@ -1,0 +1,195 @@
+"""Online multi-tenant serving runtime: the VELTAIR policy in the loop
+of the real JAX execution path.
+
+The discrete-event simulator (serving.simulator) exercises the decision
+layer against an analytical cost model; this module closes the loop on
+the *real* engine: per-tenant request queues feed a shared
+:class:`~repro.serving.engine.ServingEngine`, and at every engine step
+the scheduling policy is asked for the current interference level —
+derived from the co-running tenants' analytical resource demands, through
+the same proxy path the simulator uses — and the engine swaps to the
+matching code version via ``set_interference_level`` (kernel tile
+overrides, repro.kernels.dispatch).
+
+A :class:`Workload` is the shared currency: the same (arrival, tenant)
+stream replays through both the simulator (``replay_through_simulator``)
+and the engine (``OnlineRuntime.serve``), producing directly comparable
+``ServingMetrics`` (core.qos.compare_metrics).
+
+Time: the runtime advances a virtual clock by ``step_dt`` per engine
+step (deterministic, hardware-independent — latency numbers are in
+workload time, not wall time).  ``wall_clock=True`` instead charges the
+measured wall time of each step, for real-hardware QoS measurements.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+from repro.core import cost_model as cm
+from repro.core.interference import RunningDemand
+from repro.core.layer_block import ModelPlan
+from repro.core.qos import QueryRecord, ServingMetrics, summarize
+from repro.core.scheduler import Policy
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.request import poisson_workload, synth_prompts
+from repro.serving.simulator import SimConfig, Simulator
+
+
+@dataclasses.dataclass
+class Workload:
+    """A replayable tenant mix: arrivals in virtual seconds plus the
+    request shape every query uses (aligned prompts keep the engine's
+    lockstep decode exact)."""
+    arrivals: list[tuple[float, str]]      # (time, tenant) sorted by time
+    prompt_len: int = 8
+    max_new_tokens: int = 4
+    seed: int = 0
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.arrivals)
+
+    @property
+    def qps(self) -> float:
+        if not self.arrivals:
+            return 0.0
+        return len(self.arrivals) / max(self.arrivals[-1][0], 1e-9)
+
+    @staticmethod
+    def poisson(tenants: list[str], qps: float, n_queries: int, *,
+                prompt_len: int = 8, max_new_tokens: int = 4, seed: int = 0,
+                weights: list[float] | None = None) -> "Workload":
+        arr = poisson_workload(tenants, qps, n_queries, seed=seed,
+                               weights=weights)
+        return Workload(arr, prompt_len=prompt_len,
+                        max_new_tokens=max_new_tokens, seed=seed)
+
+
+def replay_through_simulator(wl: Workload, hw: cm.HardwareSpec,
+                             plans: dict[str, ModelPlan], policy: Policy,
+                             sim_cfg: SimConfig | None = None
+                             ) -> ServingMetrics:
+    """The analytical side of the side-by-side comparison."""
+    return Simulator(hw, plans, policy, sim_cfg).run(list(wl.arrivals))
+
+
+def plan_demand(plan: ModelPlan, hw: cm.HardwareSpec,
+                units: int) -> tuple[float, float, float]:
+    """Mean per-layer (bw, cache, ici) demand of a tenant's solo versions
+    at ``units`` — the analytical footprint one active engine slot
+    imposes on its co-runners."""
+    vs = [s.solo_version() for s in plan.version_sets]
+    itf0 = cm.Interference()
+    n = len(vs) or 1
+    bw = sum(cm.bw_demand(hw, v, units, itf0) for v in vs) / n
+    cache = sum(cm.cache_demand(hw, v, units) for v in vs) / n
+    ici = sum(cm.ici_demand(hw, v, units, itf0) for v in vs) / n
+    return bw, cache, ici
+
+
+class OnlineRuntime:
+    """Admission/dispatch loop over a real ServingEngine.
+
+    Each iteration: admit due arrivals into free slots, derive the live
+    interference level from the policy, apply it to the engine's kernel
+    dispatch, run one batched decode step, and record completions as
+    QueryRecords against each tenant's QoS deadline."""
+
+    def __init__(self, engine: ServingEngine, policy: Policy,
+                 plans: dict[str, ModelPlan], hw: cm.HardwareSpec, *,
+                 step_dt: float = 1e-3, wall_clock: bool = False,
+                 max_steps: int = 200_000):
+        self.engine = engine
+        self.policy = policy
+        self.plans = plans
+        self.hw = hw
+        self.step_dt = step_dt
+        self.wall_clock = wall_clock
+        self.max_steps = max_steps
+        self.records: list[QueryRecord] = []
+        self.level_trace: list[float] = []
+        self.conflicts = 0
+        self.steps = 0
+        # analytical per-tenant footprint at the fair-share allocation
+        units = max(1, hw.n_units // max(engine.slots, 1))
+        self._demand = {name: plan_demand(plan, hw, units)
+                        for name, plan in plans.items()}
+
+    # ------------------------------------------------------------------
+    def _active_demands(self, meta: dict, now: float
+                        ) -> list[RunningDemand]:
+        out = []
+        for slot, req in enumerate(self.engine.slot_req):
+            if req is None:
+                continue
+            tenant, _, admit = meta[req.rid]
+            bw, cache, ici = self._demand[tenant]
+            horizon = admit + self.step_dt * (req.max_new_tokens + 1)
+            out.append(RunningDemand(tenant=slot, bw=bw, cache=cache,
+                                     ici=ici, start=admit,
+                                     finish=max(horizon, now + self.step_dt)))
+        return out
+
+    def serve(self, wl: Workload) -> ServingMetrics:
+        """Replay ``wl`` through the engine; returns ServingMetrics over
+        the same records layout the simulator produces."""
+        prompts = synth_prompts(wl.n_queries, wl.prompt_len,
+                                self.engine.cfg.vocab_size, wl.seed)
+        arrivals = collections.deque(
+            (t, tenant, rid) for rid, (t, tenant)
+            in enumerate(sorted(wl.arrivals)))
+        pending: collections.deque = collections.deque()
+        meta: dict[int, tuple[str, float, float]] = {}
+        rejected: set[int] = set()
+        now = 0.0
+        busy = alloc = 0.0
+
+        while arrivals or pending or \
+                any(r is not None for r in self.engine.slot_req):
+            if self.steps >= self.max_steps:
+                break
+            while arrivals and arrivals[0][0] <= now:
+                pending.append(arrivals.popleft())
+            while pending:
+                t, tenant, rid = pending[0]
+                req = Request(rid=rid, prompt=prompts[rid],
+                              max_new_tokens=wl.max_new_tokens)
+                if not self.engine.add_request(req):
+                    # engine full: a QoS conflict in the paper's sense,
+                    # counted once per query at its first failed admission
+                    if rid not in rejected:
+                        rejected.add(rid)
+                        self.conflicts += 1
+                    break
+                meta[rid] = (tenant, t, now)
+                pending.popleft()
+            n_active = sum(r is not None for r in self.engine.slot_req)
+            if n_active == 0:
+                if arrivals:                 # idle: jump to next arrival
+                    now = max(now, arrivals[0][0])
+                    continue
+                break
+
+            demands = self._active_demands(meta, now)
+            level = self.policy.online_level(demands, now)
+            self.engine.set_interference_level(level)
+            self.level_trace.append(level)
+
+            t0 = time.perf_counter()
+            finished = self.engine.step()
+            dt = (time.perf_counter() - t0) if self.wall_clock \
+                else self.step_dt
+            self.steps += 1
+            now += dt
+            busy += n_active * dt
+            alloc += self.engine.slots * dt
+            for req in finished:
+                tenant, arrival, _ = meta[req.rid]
+                self.records.append(QueryRecord(
+                    tenant=tenant, arrival=arrival, finish=now,
+                    qos_s=self.plans[tenant].qos_s))
+
+        return summarize(self.records, wl.qps,
+                         self.conflicts / max(wl.n_queries, 1), busy, alloc)

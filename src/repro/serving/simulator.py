@@ -90,7 +90,8 @@ class Simulator:
         events: list[tuple[float, int, str, object]] = []
         for t, name in workload:
             heapq.heappush(events, (t, next(self._seq), "arrival", name))
-        qps = len(workload) / max(workload[-1][0], 1e-9)
+        qps = len(workload) / max(workload[-1][0], 1e-9) if workload \
+            else 0.0
         tid = itertools.count()
 
         while events:
@@ -145,7 +146,6 @@ class Simulator:
             got = self.pool.try_alloc(extra)
             if got <= 0:
                 continue
-            old_total = chunk.lat_at(self.hw, chunk.units)
             frac_left = max(chunk.finish - now, 0.0) / max(
                 chunk.finish - chunk.start, 1e-12)
             self.alloc_unit_time += chunk.units * (now - chunk.start)
@@ -161,7 +161,6 @@ class Simulator:
             chunk.epoch += 1
             heapq.heappush(events, (chunk.finish, next(self._seq), "finish",
                                     (chunk, chunk.epoch)))
-            _ = old_total
 
     def _dispatch(self, now, events):
         if self.pool.free <= 0:

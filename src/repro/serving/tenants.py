@@ -43,3 +43,10 @@ def lm_serving_plans(specs: list[tuple[str, str, float]],
                      ) -> dict[str, ModelPlan]:
     """specs: [(arch, shape_name, qos_ms)] -> plans keyed arch:shape."""
     return {f"{a}:{s}": lm_plan(a, s, q) for a, s, q in specs}
+
+
+def engine_version_sets(plans: dict[str, ModelPlan]) -> list:
+    """Flatten a tenant mix's multi-version tables for the online engine:
+    ServingEngine picks its tile source (the dominant layer) from these,
+    so level switches install versions the adaptive compiler produced."""
+    return [vs for plan in plans.values() for vs in plan.version_sets]

@@ -1,11 +1,19 @@
 """Shared test config.  NOTE: no XLA_FLAGS here — smoke tests and benches
-must see the real single CPU device; only launch/dryrun.py forces 512."""
+must see the real single CPU device; only launch/dryrun.py forces 512.
+
+``hypothesis`` is optional: the property-based modules importorskip it,
+and the CI profile is only registered when the package is present, so a
+bare environment (jax + numpy + pytest) still collects and runs the
+whole suite."""
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings
-
-settings.register_profile("ci", max_examples=15, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+except ImportError:          # property tests skip via pytest.importorskip
+    settings = None
+else:
+    settings.register_profile("ci", max_examples=15, deadline=None)
+    settings.load_profile("ci")

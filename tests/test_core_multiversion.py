@@ -1,6 +1,8 @@
 """Property tests for the single-pass multi-version compiler (Alg. 1)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cost_model as cm

@@ -1,6 +1,8 @@
 """Property tests: layer-block formation (Alg. 2), thresholds, proxy."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import cost_model as cm

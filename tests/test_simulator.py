@@ -77,6 +77,7 @@ def test_straggler_mitigation_counts():
     assert len(sim.records) == 120
 
 
+@pytest.mark.slow
 def test_veltair_beats_static_on_heavy_mix():
     """The paper's headline direction: FULL > layer-wise(Planaria-ish) and
     model-wise under the heavy workload class."""

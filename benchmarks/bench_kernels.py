@@ -73,3 +73,8 @@ def run_all():
     bench_matmul_variants()
     bench_flash_attention()
     bench_ssd()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run_all()

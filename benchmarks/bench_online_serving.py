@@ -2,12 +2,20 @@
 in the loop (repro.serving.runtime).
 
 Sections:
-  * online/<policy>_step_us      mean engine decode-step wall time while
-                                 serving the mix under that policy
-  * online/<policy>_qos          QoS rate of the replay (derived column)
-  * online/level_switch_us       cost of set_interference_level when the
-                                 level (and therefore the tile overrides)
-                                 actually changes, xla dispatch mode
+  * online/<policy>_step_us        mean engine decode-step wall time while
+                                   serving the mix under that policy
+  * online/<policy>_qos            QoS rate of the replay (derived column)
+  * online/switch_step_cold_us     set_interference_level + one decode step
+                                   on the FIRST visit of each level: pays
+                                   the trace/compile of that code version
+                                   (in the default "xla" dispatch mode all
+                                   versions share one executable, so this
+                                   is the single first-trace stall; under
+                                   "interpret"/"pallas" every distinct
+                                   tile table pays it)
+  * online/switch_step_warm_us     same after engine.warmup(): every switch
+                                   is a version-cache hit — a dictionary
+                                   swap of precompiled executables
 """
 from __future__ import annotations
 
@@ -42,24 +50,49 @@ def online_policies(plans):
     for name, policy in (("veltair", VeltairPolicy(HW)),
                          ("model_wise", ModelWisePolicy(HW))):
         engine = _engine(plans)
+        engine.warmup(prompt_lens=(wl.prompt_len,))
         runtime = OnlineRuntime(engine, policy, plans, HW)
         t0 = time.time()
         m = runtime.serve(wl)
         wall = time.time() - t0
         emit(f"online/{name}_step_us",
              wall * 1e6 / max(runtime.steps, 1),
-             f"qos={m.qos_rate:.2f};switches={engine.level_switches}")
+             f"qos={m.qos_rate:.2f};switches={engine.level_switches};"
+             f"compile_ms={1e3 * runtime.compile_time_s:.2f}")
 
 
 def level_switch_cost(plans):
-    engine = _engine(plans)
-    engine.set_interference_level(0.0)
-    t0 = time.time()
-    n = 200
-    for i in range(n):
-        engine.set_interference_level(float(i % 2))  # always a real switch
-    emit("online/level_switch_us", (time.time() - t0) * 1e6 / n,
-         f"switches={engine.level_switches}")
+    """Switch-then-step latency, first visit vs post-warmup: the stall the
+    precompiled version cache removes from level switches."""
+    import numpy as np
+
+    from repro.core import cost_model as cm
+    from repro.serving.engine import Request
+
+    def _flip_times(engine, levels):
+        rng = np.random.default_rng(0)
+        req = Request(rid=0, prompt=rng.integers(
+            0, engine.cfg.vocab_size, 4).astype(np.int32),
+            max_new_tokens=10 * len(levels))
+        engine.add_request(req)
+        times = []
+        for lv in levels:
+            t0 = time.time()
+            engine.set_interference_level(lv)
+            engine.step()
+            times.append(time.time() - t0)
+        return times
+
+    grid = [cm.grid_point(i) for i in range(cm.NUM_LEVELS)]
+    cold = _flip_times(_engine(plans), grid)        # first visit per level
+    warm_engine = _engine(plans)
+    warm_engine.warmup(prompt_lens=(4,))
+    warm = _flip_times(warm_engine, grid)
+    emit("online/switch_step_cold_us", 1e6 * sum(cold) / len(cold),
+         f"max_us={1e6 * max(cold):.0f}")
+    emit("online/switch_step_warm_us", 1e6 * sum(warm) / len(warm),
+         f"max_us={1e6 * max(warm):.0f};"
+         f"cache={warm_engine.version_cache.stats}")
 
 
 def run_all():

@@ -9,19 +9,37 @@ Modes:
 The mode is process-global (set once at launch).  ``get_matmul`` always
 returns a callable; ``get_attention``/``get_ssd`` return None in "xla" mode so
 callers fall back to their inline reference math.
+
+Tile overrides come from two sources, consulted in order:
+
+  1. an active *override context* (``tile_context``) — a complete per-trace
+     table pushed by whoever is tracing (the serving version cache bakes one
+     into every cached executable, so multiple engines can hold different
+     code versions alive in one process without fighting over globals);
+  2. the process-global table (``install_tile_overrides`` /
+     ``set_tile_overrides``) — the last level installed anywhere, kept for
+     observability and for code paths that run outside a context.
+
+A context is *atomic*: while one is active, ops it does not name have NO
+override (the global table is not consulted), so switching tile sources can
+never leave a stale per-op entry shaping kernels.
 """
 from __future__ import annotations
 
-from typing import Callable
+import contextlib
+from typing import Callable, Iterator
 
 import jax.numpy as jnp
 
 _MODE = "xla"
 _VALID = ("xla", "interpret", "pallas")
 
-# Tile overrides installed by the adaptive-compilation layer (core.multiversion):
+# Process-global tile overrides installed by the adaptive-compilation layer:
 # maps op name -> dict of tiling kwargs for the Pallas kernels.
 _TILE_OVERRIDES: dict[str, dict] = {}
+
+# Stack of complete override tables pushed by tile_context (innermost last).
+_CONTEXT_STACK: list[dict[str, dict]] = []
 
 
 def set_mode(mode: str) -> None:
@@ -39,18 +57,46 @@ def set_tile_overrides(op: str, **kwargs) -> None:
     _TILE_OVERRIDES[op] = dict(kwargs)
 
 
+def install_tile_overrides(tiles: dict[str, dict]) -> None:
+    """Atomically replace the whole global table with ``tiles``.
+
+    Unlike per-op ``set_tile_overrides`` this also *clears* ops absent from
+    ``tiles`` — switching from a source that overrides {matmul, attention}
+    to one that overrides only {matmul} must not leave the old attention
+    entry behind."""
+    _TILE_OVERRIDES.clear()
+    for op, kw in tiles.items():
+        _TILE_OVERRIDES[op] = dict(kw)
+
+
 def clear_tile_overrides() -> None:
     _TILE_OVERRIDES.clear()
 
 
+@contextlib.contextmanager
+def tile_context(tiles: dict[str, dict]) -> Iterator[None]:
+    """Scope a complete override table: inside the ``with``, every op reads
+    from ``tiles`` only (ops it does not name get no override).  Used at
+    trace time so each cached executable bakes in exactly one code version,
+    independent of the process-global table."""
+    _CONTEXT_STACK.append({op: dict(kw) for op, kw in tiles.items()})
+    try:
+        yield
+    finally:
+        _CONTEXT_STACK.pop()
+
+
 def tile_overrides(op: str) -> dict:
+    if _CONTEXT_STACK:
+        return dict(_CONTEXT_STACK[-1].get(op, {}))
     return dict(_TILE_OVERRIDES.get(op, {}))
 
 
 def all_tile_overrides() -> dict[str, dict]:
     """Snapshot of every installed override (observability: the online
     runtime's tests assert the engine's level switches land here)."""
-    return {op: dict(kw) for op, kw in _TILE_OVERRIDES.items()}
+    src = _CONTEXT_STACK[-1] if _CONTEXT_STACK else _TILE_OVERRIDES
+    return {op: dict(kw) for op, kw in src.items()}
 
 
 def _ref_matmul(x, w):

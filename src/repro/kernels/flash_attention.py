@@ -5,9 +5,12 @@ denominator / fp32 output accumulator live in VMEM scratch and persist
 across KV steps (TPU grid iteration is sequential).  Supports:
 
   * GQA/MQA: kv head = query head // (H/K)  (via BlockSpec index_map)
-  * causal masking with a query position offset (decode: offset = t)
+  * causal masking with a query position offset (decode: offset = t);
+    offset may be per-batch-row (continuous batching decodes every slot
+    at its own absolute position)
   * sliding-window masking (starcoder2 / recurrentgemma local attention)
   * kv_valid_len: cache slots beyond the valid length are masked
+    (scalar or per-batch-row)
   * logit softcap (tanh)
 
 The (bq, bkv) block shape is a locality/parallelism knob exposed to the
@@ -29,8 +32,9 @@ def _flash_kernel(scalars_ref, q_ref, k_ref, v_ref, o_ref,
                   m_ref, l_ref, acc_ref, *,
                   kv_steps: int, bq: int, bkv: int, scale: float,
                   window: int | None, softcap: float | None):
-    offset = scalars_ref[0]
-    kv_valid = scalars_ref[1]
+    bi = pl.program_id(0)
+    offset = scalars_ref[0, bi]
+    kv_valid = scalars_ref[1, bi]
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -78,9 +82,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     offset, kv_valid_len, bq: int = 512, bkv: int = 512,
                     window: int | None = None, softcap: float | None = None,
                     interpret: bool = False) -> jax.Array:
-    """q (B,S,H,D); k/v (B,T,K,D); query i has absolute position offset+i.
+    """q (B,S,H,D); k/v (B,T,K,D); query i of batch row b has absolute
+    position offset[b]+i.
 
-    offset / kv_valid_len may be traced int32 scalars (scalar-prefetched).
+    offset / kv_valid_len may be traced int32 scalars or (B,) vectors
+    (scalar-prefetched, broadcast to per-row).
     """
     b, s, h, d = q.shape
     t, kh = k.shape[1], k.shape[2]
@@ -97,8 +103,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         k = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
     kv_steps = tp // bkv
-    scalars = jnp.stack([jnp.asarray(offset, jnp.int32),
-                         jnp.minimum(jnp.asarray(kv_valid_len, jnp.int32), t)])
+    off = jnp.broadcast_to(jnp.asarray(offset, jnp.int32).reshape(-1), (b,))
+    kvl = jnp.broadcast_to(
+        jnp.minimum(jnp.asarray(kv_valid_len, jnp.int32), t).reshape(-1),
+        (b,))
+    scalars = jnp.stack([off, kvl])                           # (2, B)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -28,10 +28,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     q_positions: jax.Array, kv_valid_len, window=None,
                     softcap=None, bq: int = 512, bkv: int = 512,
                     interpret: bool = False) -> jax.Array:
-    """Adapter: models pass q_positions (B,S); the kernel takes a scalar
-    offset with query i at offset+i (all our call sites use contiguous
-    positions — prefill offset 0, decode offset t)."""
-    offset = q_positions.reshape(-1)[0] - 0  # first query's absolute position
+    """Adapter: models pass q_positions (B,S); the kernel takes a per-row
+    offset with query i of row b at offset[b]+i (all our call sites use
+    row-contiguous positions — prefill offset 0, decode offset t[b], which
+    differs per slot under continuous batching)."""
+    offset = q_positions[..., 0].reshape(-1)  # per-row first-query position
     return _fa.flash_attention(q, k, v, offset=offset,
                                kv_valid_len=kv_valid_len, bq=bq, bkv=bkv,
                                window=window, softcap=softcap,

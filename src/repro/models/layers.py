@@ -212,9 +212,11 @@ def attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
               cache_index: jax.Array | None = None) -> tuple[jax.Array, dict | None]:
     """Self-attention with optional KV cache.
 
-    cache: {"k": (B, Tmax, K, D), "v": ...}; cache_index: scalar int32 —
-    absolute position of the first new token (0 for prefill-from-empty).
-    Returns (y, updated_cache).
+    cache: {"k": (B, Tmax, K, D), "v": ...}; cache_index: absolute position
+    of the first new token (0 for prefill-from-empty) — a scalar int32, or
+    a (B,) int32 vector when batch rows sit at different positions
+    (continuous batching: each serving slot decodes at its own position
+    with its own kv-valid horizon).  Returns (y, updated_cache).
     """
     b, s, m = x.shape
     q = jnp.einsum("bsm,mhd->bshd", x, params["wq"].astype(x.dtype))
@@ -230,11 +232,19 @@ def attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
                    window=cfg.sliding_window)
         new_cache = None
     else:
-        idx = cache_index
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        idx = jnp.asarray(cache_index, jnp.int32)
+        if idx.ndim:
+            # per-row positions: scatter each row's new tokens at its own
+            # index; kv-valid horizon is per-row too
+            rows = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+            ck = cache["k"].at[bidx, rows].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, rows].set(v.astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
         y = attend(q, ck, cv, q_positions=qpos, kv_valid_len=idx + s,
                    window=cfg.sliding_window)
         new_cache = {"k": ck, "v": cv}

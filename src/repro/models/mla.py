@@ -79,13 +79,24 @@ def mla_attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
         ckv_all, krope_all, kv_len = c_kv, k_rope, s
         new_cache = None
     else:
-        ckv_all = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
-            (0, cache_index, 0))
-        krope_all = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
-            (0, cache_index, 0, 0))
-        kv_len = cache_index + s
+        idx = jnp.asarray(cache_index, jnp.int32)
+        if idx.ndim:
+            # per-row positions (continuous batching): scatter each row's
+            # latents at its own index, per-row kv-valid horizon
+            rows = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+            ckv_all = cache["c_kv"].at[bidx, rows].set(
+                c_kv.astype(cache["c_kv"].dtype))
+            krope_all = cache["k_rope"].at[bidx, rows].set(
+                k_rope.astype(cache["k_rope"].dtype))
+        else:
+            ckv_all = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+                (0, idx, 0))
+            krope_all = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                (0, idx, 0, 0))
+        kv_len = idx + s
         new_cache = {"c_kv": ckv_all, "k_rope": krope_all}
     t = ckv_all.shape[1]
     w_uk = params["w_uk"].astype(x.dtype)

@@ -9,7 +9,8 @@ Inputs dict:
   {"tokens": (B,S) int32}                        LM archs
   {"embeds": (B,S,M), "labels": (B,S) int32}     vlm/audio stub frontends
   optional {"positions": (B,S) or (3,B,S)}       (M-RoPE)
-Decode inputs: {"tokens": (B,) } or {"embeds": (B,M)} plus scalar position t.
+Decode inputs: {"tokens": (B,) } or {"embeds": (B,M)} plus position t —
+scalar int32, or (B,) int32 per-row positions (continuous batching).
 """
 from __future__ import annotations
 
@@ -301,6 +302,11 @@ class Model:
         return x
 
     def _default_positions(self, b: int, s: int, t0: int | jax.Array = 0):
+        """Row-contiguous positions from ``t0``: scalar (all rows aligned)
+        or (B,) per-row offsets (continuous batching)."""
+        t0 = jnp.asarray(t0, jnp.int32)
+        if t0.ndim == 1:
+            t0 = t0[:, None]
         pos = t0 + jnp.arange(s, dtype=jnp.int32)[None, :]
         pos = jnp.broadcast_to(pos, (b, s))
         if self.cfg.pos_embed == "mrope":
@@ -441,8 +447,12 @@ class Model:
         return logits[:, 0], new_cache
 
     def decode_step(self, params, inputs, cache, t):
-        """One-token decode at absolute position t (scalar int32)."""
+        """One-token decode at absolute position ``t`` — a scalar int32
+        (all rows aligned) or a (B,) int32 vector of per-row positions
+        (continuous batching: each slot advances independently; attention
+        masks each row at its own kv-valid horizon)."""
         cfg = self.cfg
+        t = jnp.asarray(t, jnp.int32)
         if "tokens" in inputs:
             b = inputs["tokens"].shape[0]
             toks = inputs["tokens"].reshape(b, 1)

@@ -151,22 +151,33 @@ def window_attention_decode(q: jax.Array, cache: dict, k_new: jax.Array,
                             window: int) -> tuple[jax.Array, dict]:
     """One-token attention against a ring-buffer cache.
 
-    q (B,1,H,D); k_new/v_new (B,1,K,D); t scalar int32 absolute position.
+    q (B,1,H,D); k_new/v_new (B,1,K,D); t: absolute position — scalar
+    int32 or (B,) vector when rows decode at different positions.
     Returns (context (B,1,H,D), new_cache)."""
-    slot = jnp.mod(t, window)
-    ck = jax.lax.dynamic_update_slice(
-        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
-    cpos = jax.lax.dynamic_update_slice(
-        cache["pos"], jnp.broadcast_to(t, (cache["pos"].shape[0], 1)
-                                       ).astype(jnp.int32), (0, slot))
     b, _, h, d = q.shape
+    t = jnp.asarray(t, jnp.int32)
+    slot = jnp.mod(t, window)
+    if t.ndim:
+        bidx = jnp.arange(b, dtype=jnp.int32)
+        ck = cache["k"].at[bidx, slot].set(
+            k_new[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, slot].set(
+            v_new[:, 0].astype(cache["v"].dtype))
+        cpos = cache["pos"].at[bidx, slot].set(t)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.broadcast_to(t, (cache["pos"].shape[0], 1)
+                                           ).astype(jnp.int32), (0, slot))
     kh = ck.shape[2]
     g = h // kh
     qf = q.reshape(b, 1, kh, g, d).astype(jnp.float32) * (d ** -0.5)
     scores = jnp.einsum("bskgd,btkd->bkgst", qf, ck.astype(jnp.float32))
-    valid = (cpos >= 0) & (cpos <= t) & (cpos > t - window)    # (B,Wnd)
+    tcol = t[:, None] if t.ndim else t                         # (B,1) | ()
+    valid = (cpos >= 0) & (cpos <= tcol) & (cpos > tcol - window)  # (B,Wnd)
     scores = jnp.where(valid[:, None, None, None, :], scores, -2.38e38)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bkgst,btkd->bskgd", probs, cv.astype(jnp.float32))

@@ -5,10 +5,12 @@ from repro.serving.runtime import (OnlineRuntime, Workload, plan_demand,
                                    replay_through_simulator)
 from repro.serving.tenants import (build_paper_plans, engine_version_sets,
                                    lm_serving_plans)
+from repro.serving.version_cache import VersionCache, VersionEntry, tiles_key
 
 __all__ = [
     "SimConfig", "Simulator", "run_sweep", "poisson_workload",
     "qos_inverse_weights", "uniform_workload", "synth_prompts",
     "OnlineRuntime", "Workload", "plan_demand", "replay_through_simulator",
     "build_paper_plans", "engine_version_sets", "lm_serving_plans",
+    "VersionCache", "VersionEntry", "tiles_key",
 ]

@@ -2,21 +2,27 @@
 
 Wraps a model's prefill/decode with continuous batching over request
 slots: requests join free slots, prefill fills their cache rows, decode
-steps run the whole batch, finished rows free their slots.  This is the
-engine the examples drive on CPU with reduced models; at pod scale the
-same functions are jitted with the serve-mode shardings (launch/serve.py).
+steps run the whole batch, finished rows free their slots.  Decode is
+*per-slot*: every slot advances at its own absolute position with its own
+kv-valid horizon, so staggered admissions and mixed-length prompts are
+exact — each slot's tokens match a sequential one-request-at-a-time
+reference.  This is the engine the examples drive on CPU with reduced
+models; at pod scale the same functions are jitted with the serve-mode
+shardings (launch/serve.py).
 
-The VELTAIR integration point: ``set_interference_level`` installs the
-kernel tile overrides (repro.kernels.dispatch.set_tile_overrides) of the
-code version the adaptive compiler selected for that pressure — either
+The VELTAIR integration point: ``set_interference_level`` selects the
+code version the adaptive compiler produced for that pressure — either
 from a compiled ``VersionSet`` (the multi-version tables of an analytical
 ModelPlan) or from the built-in level table, which shrinks tiles as
-pressure rises (locality -> parallelism, paper Fig. 6/9).  The engine is
+pressure rises (locality -> parallelism, paper Fig. 6/9).  Executables
+come from a per-engine :class:`~repro.serving.version_cache.VersionCache`
+keyed by the tile configuration: every version is traced once (its tiles
+baked in through a ``kernels.dispatch.tile_context``), after which a
+level switch is a dictionary swap of already-compiled callables — no
+retrace, and no interference between engines sharing the process.
+``warmup()`` pre-builds the whole table ahead of time.  The engine is
 oblivious to how the level was derived; repro.serving.runtime queries the
-scheduling policy for it every step.  In "interpret"/"pallas" dispatch
-modes a level change re-jits prefill/decode so the new tiling is actually
-traced in; in "xla" mode the overrides are installed but the reference
-path ignores them.
+scheduling policy for it every step.
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ from repro.configs.base import ModelConfig
 from repro.core import cost_model as cm
 from repro.kernels import dispatch
 from repro.models.model import Model, build_model
+from repro.serving.version_cache import VersionCache
 
 # Built-in interference-level -> tile table (one entry per grid level).
 # Low pressure: big tiles, maximal reuse of the shared cache; high
@@ -64,6 +71,9 @@ class ServingEngine:
         self.cache = self.model.init_cache(batch_slots, max_len)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)
+        # pristine single-slot cache row: admissions prefill from this so a
+        # reused slot can never leak the previous tenant's KV / SSM state
+        self._empty_row = self._slice_row(0)
         # adaptive-compilation state: tiles come from the dominant layer's
         # multi-version table when one is supplied, else the default table
         self.version_sets = version_sets
@@ -72,44 +82,80 @@ class ServingEngine:
                              if version_sets else None)
         self.interference_level = 0.0
         self._active_tiles: dict | None = None
-        self.level_switches = 0           # re-jit count (observability)
-        self._make_jits()
-
-    def _make_jits(self):
-        cfg = self.cfg
-        self._decode = jax.jit(self.model.decode_step)
-        self._prefill_one = jax.jit(
-            lambda p, toks, cache: build_model(cfg).prefill(
-                p, {"tokens": toks}, cache))
+        self.level_switches = 0           # distinct-version switch count
+        self.version_cache = VersionCache(self.model)
+        self._use_version({})             # baseline: no overrides installed
 
     # ------------------------------------------------------------------
+    def _use_version(self, tiles: dict) -> None:
+        entry = self.version_cache.get(tiles)
+        self._prefill_one = entry.prefill
+        self._decode = entry.decode
+
+    def tiles_for_level(self, level: float) -> dict:
+        """The tile table the compiled source selects at ``level``."""
+        return self._tiles_for(cm.Interference.from_level(level))
+
+    def _tiles_for(self, itf: cm.Interference) -> dict:
+        if self._tile_source is not None:
+            v = self._tile_source.select(itf)
+            return {"matmul": {"bm": int(v.bm), "bk": int(v.bk),
+                               "bn": int(v.bn)}}
+        return DEFAULT_LEVEL_TILES[cm.level_to_idx(itf.level)]
+
     def set_interference_level(self, level: float) -> dict:
         """Switch the active code version to the one compiled for
         ``level`` (0.0 = solo .. 1.0 = heavy co-location).
 
-        Installs the matching kernel tile overrides through
-        repro.kernels.dispatch; when the overrides actually change under a
-        Pallas dispatch mode, the jitted prefill/decode are rebuilt so the
-        next call traces with the new tiling.  Returns the installed
-        override dict (observability / tests)."""
+        Swaps in the version-cache entry for the matching tile
+        configuration (already-compiled executables after ``warmup()`` or
+        a prior visit — never a retrace) and atomically installs the same
+        tiles in the process-global dispatch table for observability /
+        out-of-engine callers: ops the new source does not override are
+        cleared, so no stale per-op entry survives a source switch.
+        Returns the installed override dict (observability / tests)."""
         itf = cm.Interference.from_level(level)
-        if self._tile_source is not None:
-            v = self._tile_source.select(itf)
-            tiles = {"matmul": {"bm": int(v.bm), "bk": int(v.bk),
-                                "bn": int(v.bn)}}
-        else:
-            tiles = DEFAULT_LEVEL_TILES[cm.level_to_idx(itf.level)]
+        tiles = self._tiles_for(itf)
         if tiles != self._active_tiles:
-            for op, kw in tiles.items():
-                dispatch.set_tile_overrides(op, **kw)
-            if dispatch.get_mode() != "xla":
-                # prefill may already be traced (add_request runs before
-                # the first level is set), so every change must retrace
-                self._make_jits()
+            dispatch.install_tile_overrides(tiles)
+            self._use_version(tiles)
             self._active_tiles = tiles
             self.level_switches += 1
         self.interference_level = itf.level
         return {op: dict(kw) for op, kw in tiles.items()}
+
+    def warmup(self, prompt_lens: tuple[int, ...] = (),
+               levels: list[float] | None = None) -> dict:
+        """Ahead-of-time build AND execute the executables of every
+        interference level (default: the full NUM_LEVELS grid), so later
+        ``set_interference_level`` calls are dictionary swaps and the step
+        that follows them never traces or compiles.
+
+        Decode is shape-stable and always warmed; prefill specializes per
+        prompt length, so pass the lengths the workload will use in
+        ``prompt_lens``.  Memory: one compiled decode per distinct tile
+        configuration plus one compiled prefill per (configuration,
+        length).  Returns the version-cache stats snapshot."""
+        if levels is None:
+            levels = [cm.grid_point(i) for i in range(cm.NUM_LEVELS)]
+        toks = jnp.zeros((self.slots,), jnp.int32)
+        pos = jnp.zeros((self.slots,), jnp.int32)
+        # the currently-active version first (the no-override baseline an
+        # engine serves with before its first level is set), then the table
+        tile_tables = [self._active_tiles if self._active_tiles is not None
+                       else {}]
+        tile_tables += [self.tiles_for_level(lv) for lv in levels]
+        for tiles in tile_tables:
+            entry = self.version_cache.get(tiles)
+            logits, _ = entry.decode(self.params, {"tokens": toks},
+                                     self.cache, pos)
+            logits.block_until_ready()
+            for plen in prompt_lens:
+                lg, _ = entry.prefill(
+                    self.params, jnp.zeros((1, int(plen)), jnp.int32),
+                    self._empty_row)
+                lg.block_until_ready()
+        return dict(self.version_cache.stats)
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> int | None:
@@ -142,14 +188,16 @@ class ServingEngine:
     def add_request(self, req: Request) -> bool:
         """Admit a request: prefill its prompt into its slot's cache rows.
 
-        Single-row prefill runs on a batch-1 view then writes the slot row
-        (slot caches are independent along the batch axis)."""
+        Single-row prefill runs on a batch-1 view of a pristine row, then
+        writes the slot row (slot caches are independent along the batch
+        axis).  Prompts of any length join at any step — decode is
+        per-slot, so no alignment with resident slots is required."""
         slot = self._free_slot()
         if slot is None:
             return False
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         logits, row_cache = self._prefill_one(self.params, toks,
-                                              self._slice_row(slot))
+                                              self._empty_row)
         self.cache = self._write_row(row_cache, slot)
         first = int(jnp.argmax(logits[0]))
         req.output.append(first)
@@ -165,13 +213,13 @@ class ServingEngine:
         toks = np.zeros(self.slots, np.int32)
         for i in active:
             toks[i] = self.slot_req[i].output[-1]
-        # homogeneous decode position: engine steps slots in lockstep using
-        # the max position; per-slot kv_valid masking keeps rows exact when
-        # positions align (examples use aligned prompts).
-        t = int(self.slot_pos[active].max())
+        # per-slot positions: each row decodes at its own absolute position
+        # and attends under its own kv-valid horizon, so mixed-length /
+        # staggered prompts stay exact (free slots compute garbage rows
+        # that the next admission's pristine-row prefill replaces)
         logits, self.cache = self._decode(
             self.params, {"tokens": jnp.asarray(toks)}, self.cache,
-            jnp.int32(t))
+            jnp.asarray(self.slot_pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         finished = []
         for i in active:

@@ -19,7 +19,10 @@ and the engine (``OnlineRuntime.serve``), producing directly comparable
 Time: the runtime advances a virtual clock by ``step_dt`` per engine
 step (deterministic, hardware-independent — latency numbers are in
 workload time, not wall time).  ``wall_clock=True`` instead charges the
-measured wall time of each step, for real-hardware QoS measurements.
+measured wall time of each step — *including* the version switch that
+precedes it, so any re-jit/compile stall shows up in latency (that's the
+overhead VELTAIR's adaptive compilation amortizes; ``compile_time_s``
+tracks it separately, and ``ServingEngine.warmup()`` eliminates it).
 """
 from __future__ import annotations
 
@@ -40,16 +43,29 @@ from repro.serving.simulator import SimConfig, Simulator
 @dataclasses.dataclass
 class Workload:
     """A replayable tenant mix: arrivals in virtual seconds plus the
-    request shape every query uses (aligned prompts keep the engine's
-    lockstep decode exact)."""
+    request shapes.  Prompts need not be aligned — the engine decodes
+    every slot at its own position — so ``prompt_len_spread`` > 0 draws each
+    query's length uniformly from [prompt_len - spread, prompt_len]
+    (deterministic per seed)."""
     arrivals: list[tuple[float, str]]      # (time, tenant) sorted by time
     prompt_len: int = 8
     max_new_tokens: int = 4
     seed: int = 0
+    prompt_len_spread: int = 0             # mixed-length prompts when > 0
 
     @property
     def n_queries(self) -> int:
         return len(self.arrivals)
+
+    def prompt_lengths(self) -> list[int]:
+        """Per-query prompt lengths (deterministic per seed)."""
+        import numpy as np
+        if not self.prompt_len_spread:
+            return [self.prompt_len] * self.n_queries
+        rng = np.random.default_rng(self.seed + 0x5EED)
+        lo = max(1, self.prompt_len - self.prompt_len_spread)
+        return [int(x) for x in
+                rng.integers(lo, self.prompt_len + 1, self.n_queries)]
 
     @property
     def qps(self) -> float:
@@ -60,11 +76,13 @@ class Workload:
     @staticmethod
     def poisson(tenants: list[str], qps: float, n_queries: int, *,
                 prompt_len: int = 8, max_new_tokens: int = 4, seed: int = 0,
-                weights: list[float] | None = None) -> "Workload":
+                weights: list[float] | None = None,
+                prompt_len_spread: int = 0) -> "Workload":
         arr = poisson_workload(tenants, qps, n_queries, seed=seed,
                                weights=weights)
         return Workload(arr, prompt_len=prompt_len,
-                        max_new_tokens=max_new_tokens, seed=seed)
+                        max_new_tokens=max_new_tokens, seed=seed,
+                        prompt_len_spread=prompt_len_spread)
 
 
 def replay_through_simulator(wl: Workload, hw: cm.HardwareSpec,
@@ -112,6 +130,11 @@ class OnlineRuntime:
         self.level_trace: list[float] = []
         self.conflicts = 0
         self.steps = 0
+        # wall time spent inside set_interference_level — with a warmed
+        # version cache this is pure dictionary swaps; without it, this is
+        # where re-jit/compile stalls land (and they ARE charged to latency
+        # in wall_clock mode: the step timer starts before the switch)
+        self.compile_time_s = 0.0
         # analytical per-tenant footprint at the fair-share allocation
         units = max(1, hw.n_units // max(engine.slots, 1))
         self._demand = {name: plan_demand(plan, hw, units)
@@ -137,6 +160,7 @@ class OnlineRuntime:
         the same records layout the simulator produces."""
         prompts = synth_prompts(wl.n_queries, wl.prompt_len,
                                 self.engine.cfg.vocab_size, wl.seed)
+        lens = wl.prompt_lengths()
         arrivals = collections.deque(
             (t, tenant, rid) for rid, (t, tenant)
             in enumerate(sorted(wl.arrivals)))
@@ -154,7 +178,7 @@ class OnlineRuntime:
                 pending.append(arrivals.popleft())
             while pending:
                 t, tenant, rid = pending[0]
-                req = Request(rid=rid, prompt=prompts[rid],
+                req = Request(rid=rid, prompt=prompts[rid, :lens[rid]],
                               max_new_tokens=wl.max_new_tokens)
                 if not self.engine.add_request(req):
                     # engine full: a QoS conflict in the paper's sense,
@@ -174,10 +198,14 @@ class OnlineRuntime:
 
             demands = self._active_demands(meta, now)
             level = self.policy.online_level(demands, now)
+            # the step timer starts BEFORE the version switch: any re-jit /
+            # compile the switch triggers is real serving latency (the very
+            # overhead adaptive compilation amortizes) and must be charged
+            t0 = time.perf_counter()
             self.engine.set_interference_level(level)
+            self.compile_time_s += time.perf_counter() - t0
             self.level_trace.append(level)
 
-            t0 = time.perf_counter()
             finished = self.engine.step()
             dt = (time.perf_counter() - t0) if self.wall_clock \
                 else self.step_dt

@@ -97,6 +97,10 @@ class Simulator:
         while events:
             now, _, kind, payload = heapq.heappop(events)
             if now > self.cfg.max_sim_time:
+                # truncated run: chunks still in flight never reach
+                # _on_finish, so account their held unit-time here or
+                # unit_efficiency overstates
+                self._flush_inflight()
                 break
             if kind == "arrival":
                 task = TaskState(tid=next(tid), tenant=payload,
@@ -112,6 +116,16 @@ class Simulator:
         return summarize(self.records, qps,
                          self.conflicts / max(self.requests, 1),
                          self.busy_unit_time, self.alloc_unit_time)
+
+    def _flush_inflight(self) -> None:
+        """Charge allocated unit-time of still-running chunks at
+        termination — the full start..finish hold _on_finish would have
+        charged (their busy flops were already charged in full at start,
+        so clipping alloc at the cut-off would still overstate
+        efficiency)."""
+        for chunk in self.running:
+            self.alloc_unit_time += chunk.units * (chunk.finish
+                                                   - chunk.start)
 
     # ------------------------------------------------------------------
     def _on_finish(self, chunk: RunningChunk, now, events):

@@ -1,0 +1,108 @@
+"""Precompiled multi-version executable cache for the serving engine.
+
+VELTAIR's premise is that switching code versions under interference
+pressure is cheap enough to do *online*.  A naive engine pays a full
+``jax.jit`` retrace every time the tile overrides change — exactly the
+overhead adaptive compilation is supposed to amortize.  This module makes
+the switch a dictionary lookup: one :class:`VersionEntry` per tile
+configuration holds its own jitted prefill/decode callables, traced under
+a :func:`repro.kernels.dispatch.tile_context` that bakes that entry's
+tiles into the executable.  Because every entry owns its trace cache,
+
+  * revisiting a level never retraces (jit hits its own cache);
+  * multiple engines with different active versions coexist in one
+    process — no engine's switch can invalidate another's compiled code,
+    since nothing reads the process-global override table at trace time.
+
+Keys are derived from the same tile dictionaries the engine's level
+tables produce (``VersionSet`` selections or ``DEFAULT_LEVEL_TILES``), so
+the cache holds at most one entry per distinct code version (<= NUM_LEVELS
+per engine).  Memory footprint: one traced+compiled prefill per prompt
+length warmed plus one decode executable per entry.
+
+``traces`` counts *actual* jax traces (the counter increments inside the
+traced body, so it fires on first-call tracing and any shape-driven
+retrace, and stays flat on cache hits) — tests assert a full level sweep
+after :meth:`ServingEngine.warmup` leaves it unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+from repro.kernels import dispatch
+
+
+def tiles_key(tiles: dict[str, dict]) -> tuple:
+    """Canonical hashable key for an op -> tiling-kwargs table."""
+    return tuple(sorted(
+        (op, tuple(sorted(kw.items()))) for op, kw in tiles.items()))
+
+
+@dataclasses.dataclass
+class VersionEntry:
+    """One code version: jitted executables with the tiles baked in."""
+    key: tuple
+    tiles: dict[str, dict]
+    prefill: Callable          # (params, tokens (1,L), row_cache) -> ...
+    decode: Callable           # (params, {"tokens": (B,)}, cache, t) -> ...
+
+
+class VersionCache:
+    """tiles -> VersionEntry, building (and counting) on first use."""
+
+    def __init__(self, model: Any):
+        self.model = model
+        self._entries: dict[tuple, VersionEntry] = {}
+        self.hits = 0              # get() found an existing entry
+        self.misses = 0            # get() had to build one
+        self.traces = 0            # actual jax traces across all entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses, "traces": self.traces}
+
+    def get(self, tiles: dict[str, dict]) -> VersionEntry:
+        if dispatch.get_mode() == "xla":
+            # the reference path ignores tiling entirely: all versions
+            # share one executable (keying by tiles here would trace
+            # NUM_LEVELS byte-identical programs for nothing)
+            tiles = {}
+        key = tiles_key(tiles)
+        entry = self._entries.get(key)
+        if entry is None:
+            entry = self._build(tiles, key)
+            self._entries[key] = entry
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    # ------------------------------------------------------------------
+    def _build(self, tiles: dict[str, dict], key: tuple) -> VersionEntry:
+        snap = {op: dict(kw) for op, kw in tiles.items()}
+        model = self.model
+
+        # The tile_context wraps the *trace*: the body below runs as python
+        # only while jax traces it (first call per shape), which is exactly
+        # when kernels.dispatch reads the overrides.  Compiled re-runs never
+        # enter it, so the process-global override table is irrelevant to
+        # this entry's numerics — and the trace counter stays honest.
+        def prefill(params, tokens, row_cache):
+            self.traces += 1
+            with dispatch.tile_context(snap):
+                return model.prefill(params, {"tokens": tokens}, row_cache)
+
+        def decode(params, inputs, cache, t):
+            self.traces += 1
+            with dispatch.tile_context(snap):
+                return model.decode_step(params, inputs, cache, t)
+
+        return VersionEntry(key=key, tiles=snap,
+                            prefill=jax.jit(prefill), decode=jax.jit(decode))

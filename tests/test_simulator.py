@@ -104,3 +104,22 @@ def test_upgrade_mechanism_recovers_units(plans):
     sim.run(poisson_workload(["resnet50"], 250, 200, seed=5))
     assert sim.conflicts > 0               # under pressure there are some
     assert sim.pool.free == sim.pool.total
+
+
+def test_truncated_run_accounts_inflight_allocation(plans):
+    """max_sim_time cutting the event loop must not drop the allocated
+    unit-time of chunks still in flight (unit_efficiency would be
+    overstated: their alloc never flows through _on_finish)."""
+    from repro.serving import SimConfig
+
+    cutoff = 1e-5                       # far below any chunk latency
+    sim = Simulator(HW, plans, ModelWisePolicy(HW),
+                    SimConfig(max_sim_time=cutoff))
+    sim.run(uniform_workload("resnet50", 10.0, 1))
+    assert sim.running, "chunk must still be in flight at the cut-off"
+    # full start..finish hold, matching what _on_finish would charge (busy
+    # flops were charged in full at dispatch)
+    expect = sum(c.units * (c.finish - c.start) for c in sim.running)
+    assert expect > 0.0
+    assert sim.alloc_unit_time == pytest.approx(expect)
+    assert sim.busy_unit_time <= sim.alloc_unit_time

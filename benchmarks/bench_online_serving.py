@@ -16,18 +16,29 @@ Sections:
   * online/switch_step_warm_us     same after engine.warmup(): every switch
                                    is a version-cache hit — a dictionary
                                    swap of precompiled executables
+  * colocate/<policy>_tick_us      mean cluster tick wall time while three
+                                   *different* real models (gemma-2b,
+                                   starcoder2-3b, mamba2-780m) share the
+                                   unit pool under that policy; derived
+                                   column reports QoS rate, per-engine mean
+                                   levels, re-plan quanta and peak units —
+                                   the VELTAIR-vs-baselines co-location
+                                   comparison on the real engine path
 """
 from __future__ import annotations
 
 import time
 
 from benchmarks.common import HW, emit
-from repro.core.scheduler import ModelWisePolicy, VeltairPolicy
-from repro.serving import (OnlineRuntime, Workload, build_paper_plans,
+from repro.core.scheduler import (FixedBlockPolicy, ModelWisePolicy,
+                                  PremaPolicy, VeltairPolicy)
+from repro.serving import (ClusterRuntime, OnlineRuntime, Workload,
+                           build_cluster, build_paper_plans, cluster_plans,
                            engine_version_sets)
 
 TENANTS = ["resnet50", "googlenet"]
 N_QUERIES = 24
+CLUSTER_ARCHS = ["gemma-2b", "starcoder2-3b", "mamba2-780m"]
 
 
 def _engine(plans):
@@ -95,10 +106,40 @@ def level_switch_cost(plans):
          f"cache={warm_engine.version_cache.stats}")
 
 
+def colocation_policies():
+    """Three heterogeneous real engines on one unit pool, side-by-side
+    ServingMetrics for VELTAIR vs two-plus baselines (the ISSUE-3
+    acceptance scenario).  Per-engine level traces come back in
+    ClusterMetrics; the derived column compresses them to means."""
+    plans = cluster_plans(CLUSTER_ARCHS, HW)
+    wl = Workload.poisson(CLUSTER_ARCHS, 90, 18, prompt_len=4,
+                          max_new_tokens=3, seed=1)
+    policies = (("veltair", lambda: VeltairPolicy(HW)),
+                ("model_wise", lambda: ModelWisePolicy(HW)),
+                ("prema", lambda: PremaPolicy(HW)),
+                ("block6", lambda: FixedBlockPolicy(HW, 6)))
+    for name, pf in policies:
+        tenants = build_cluster(CLUSTER_ARCHS, HW, plans=plans)
+        runtime = ClusterRuntime(tenants, pf(), HW)
+        runtime.warmup(prompt_lens=(wl.prompt_len,))
+        t0 = time.time()
+        m = runtime.serve(wl)
+        wall = time.time() - t0
+        levels = ";".join(f"{a.split('-')[0]}_lv={v:.2f}"
+                          for a, v in m.mean_levels.items())
+        emit(f"colocate/{name}_tick_us",
+             wall * 1e6 / max(runtime.ticks, 1),
+             f"qos={m.aggregate.qos_rate:.2f};"
+             f"p99_ms={1e3 * m.aggregate.p99_latency_s:.2f};"
+             f"quanta={sum(m.quanta.values())};"
+             f"peak_units={m.pool_peak_used};{levels}")
+
+
 def run_all():
     plans = build_paper_plans(TENANTS, HW)
     online_policies(plans)
     level_switch_cost(plans)
+    colocation_policies()
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """Flagship example: multi-tenant serving with VELTAIR vs baselines.
 
-    PYTHONPATH=src python examples/multi_tenant_serving.py [--no-online]
+    PYTHONPATH=src python examples/multi_tenant_serving.py \
+        [--no-online] [--no-colocate]
 
 Part 1 (simulator): compiles multi-version plans for the paper's MLPerf
 mix, then serves a Poisson query stream under every scheduling policy and
@@ -9,9 +10,14 @@ production repro.core code; time advancement is simulated.
 
 Part 2 (online runtime): replays one tenant mix through the *real* JAX
 ServingEngine with the VELTAIR policy in the loop — every engine step the
-policy's proxy-predicted interference level swaps the active kernel code
-version (tile overrides via repro.kernels.dispatch) — and prints the
-engine-vs-simulator ServingMetrics side by side.
+runtime polls the synthesized performance counters and the policy's
+proxy maps them to the interference level that swaps the active kernel
+code version (tile overrides via repro.kernels.dispatch) — and prints
+the engine-vs-simulator ServingMetrics side by side.
+
+Part 3 (co-location cluster): three *different* real models share the
+unit pool under one global scheduler; see colocation_demo below for the
+step-by-step walkthrough.
 """
 import argparse
 import time
@@ -91,10 +97,69 @@ def online_engine_demo(hw):
         print(f"{field:18s} {a:12.4f} {b:12.4f}")
 
 
+def colocation_demo(hw):
+    """Co-location walkthrough: heterogeneous models, one unit pool.
+
+    Each numbered step below is one knob of the co-location path; the
+    printed block at the end is reproduced verbatim in README.md (keep
+    them in sync)."""
+    from repro.core.scheduler import ModelWisePolicy, PremaPolicy
+    from repro.serving import ClusterRuntime, Workload, build_cluster, \
+        cluster_plans
+
+    # (1) Pick the tenants: three architectures from repro.configs with
+    #     genuinely different layer profiles (dense attention, GQA code
+    #     model, SSM).  Each gets an analytic ModelPlan on this hardware
+    #     with a feasible auto-derived QoS (qos_scale x solo latency).
+    archs = ["gemma-2b", "starcoder2-3b", "mamba2-780m"]
+    plans = cluster_plans(archs, hw, qos_scale=3.0)
+
+    # (2) Stand up one real (reduced) JAX engine per model.  Every engine
+    #     owns its params, KV/SSM cache, and precompiled VersionCache;
+    #     its tile table comes from its OWN plan's multi-version
+    #     compilation, so per-engine levels select per-model code.
+    tenants = build_cluster(archs, hw, batch_slots=2, max_len=32,
+                            plans=plans)
+
+    # (3) One shared Poisson stream whose tenant names route queries to
+    #     the matching engine.
+    wl = Workload.poisson(archs, 90, 18, prompt_len=4, max_new_tokens=3,
+                          seed=1)
+
+    # (4) Serve under the global scheduler.  Per quantum and per engine:
+    #     counters are synthesized from the live slot occupancy of the
+    #     co-resident engines, the calibrated LinearProxy maps them to a
+    #     pressure estimate, plan_chunk_at forms the next layer-block
+    #     (its size = the engine's dispatch quantum, its unit need = the
+    #     engine's share of hw.n_units), and set_interference_level swaps
+    #     that engine to the matching precompiled code version.
+    print(f"\nco-locating {len(archs)} heterogeneous real engines on "
+          f"{hw.n_units} {hw.unit}s ...")
+    rows = []
+    for name, policy in (("veltair", VeltairPolicy(hw)),
+                         ("model-wise", ModelWisePolicy(hw)),
+                         ("prema", PremaPolicy(hw))):
+        runtime = ClusterRuntime(tenants if name == "veltair"
+                                 else build_cluster(archs, hw, plans=plans),
+                                 policy, hw)
+        m = runtime.serve(wl)
+        lv = "/".join(f"{m.mean_levels[a]:.2f}" for a in archs)
+        rows.append((name, m.aggregate.qos_rate,
+                     1e3 * m.aggregate.p99_latency_s,
+                     sum(m.quanta.values()), m.pool_peak_used, lv))
+    print(f"{'policy':12s} {'qos':>5s} {'p99_ms':>7s} {'quanta':>7s} "
+          f"{'peak_units':>10s}  mean levels ({'/'.join(archs)})")
+    for name, qos, p99, quanta, peak, lv in rows:
+        print(f"{name:12s} {qos:5.2f} {p99:7.2f} {quanta:7d} {peak:10d}  "
+              f"{lv}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--no-online", action="store_true",
                     help="skip the real-engine replay (simulator only)")
+    ap.add_argument("--no-colocate", action="store_true",
+                    help="skip the multi-engine co-location demo")
     args = ap.parse_args()
 
     hw = cm.CPU_3990X
@@ -113,6 +178,9 @@ def main():
 
     if not args.no_online:
         online_engine_demo(hw)
+
+    if not args.no_colocate:
+        colocation_demo(hw)
 
 
 if __name__ == "__main__":

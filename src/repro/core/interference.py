@@ -65,6 +65,39 @@ COUNTER_NAMES = ("l3_miss_rate", "l3_accesses", "ipc", "flop_rate",
                  "branch_rate", "frontend_stalls")
 
 
+@dataclasses.dataclass
+class CounterSample:
+    """One performance-counter read (what a PMU poll would return).
+
+    ``values`` follows :data:`COUNTER_NAMES` order; only the first two
+    (the L3 counters) carry the interference signal the proxy consumes.
+    ``truth`` is the ground-truth pressure the counters were synthesized
+    from — it exists for calibration and proxy-accuracy tests ONLY and
+    must never feed a scheduling decision (the runtime's level decisions
+    flow through :class:`LinearProxy`, like the real system's)."""
+    values: np.ndarray
+    t: float
+    truth: Interference | None = None
+
+
+def read_counters(hw: HardwareSpec, victim: int,
+                  demands: list[RunningDemand], now: float,
+                  rng: np.random.Generator, *,
+                  exclude_soon_done: bool = True) -> CounterSample:
+    """Poll the (synthesized) performance counters as seen by ``victim``.
+
+    This is the online runtime's sensor: the true co-runner pressure is
+    only used to decide what the counters *would read* — the proxy then
+    maps the noisy counter values back to a pressure estimate, so the
+    scheduler experiences proxy error exactly like the deployed system.
+    ``victim=-1`` matches no running demand, i.e. the caller observes the
+    full co-runner pressure (an engine asking "what hits me right now")."""
+    truth = pressure_on(victim, demands, now,
+                        exclude_soon_done=exclude_soon_done)
+    values = synthesize_counters(hw, truth, rng)
+    return CounterSample(values=values, t=now, truth=truth)
+
+
 def synthesize_counters(hw: HardwareSpec, itf: Interference,
                         rng: np.random.Generator) -> np.ndarray:
     """What the perf counters would read under pressure ``itf``.

@@ -5,6 +5,13 @@ pivot*: it starts a new block.  Each block's unit budget is then
 recalculated so the whole block meets the sum of its layers' QoS slices
 using at most ``Avg_C + thres`` units — high-demand layers borrow time from
 their cheap neighbours instead of spiking the allocation (paper Fig. 10a).
+
+Consumers: the simulator executes blocks in analytic time; the
+co-location cluster (``repro.serving.cluster``) reuses the same
+formation on the real path — a block's layer count becomes an engine's
+dispatch quantum (decode steps between scheduling interventions) and its
+unit requirement the engine's pool share, so scheduling granularity
+adapts to pressure exactly as Alg. 2 prescribes.
 """
 from __future__ import annotations
 

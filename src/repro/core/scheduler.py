@@ -24,9 +24,9 @@ import numpy as np
 
 from repro.core import cost_model as cm
 from repro.core import layer_block as lb
-from repro.core.interference import (LinearProxy, RunningDemand,
-                                     calibrate_proxy, pressure_on,
-                                     synthesize_counters)
+from repro.core.interference import (CounterSample, LinearProxy,
+                                     RunningDemand, calibrate_proxy,
+                                     read_counters)
 
 
 @dataclasses.dataclass
@@ -62,6 +62,16 @@ class TaskState:
 
 
 class Policy:
+    """Scheduling-policy interface, driven from three call sites:
+
+    * the discrete-event simulator calls :meth:`plan_chunk` at admission
+      and at every block boundary (oracle co-runner demands in hand);
+    * the online runtimes (``repro.serving.runtime`` /
+      ``repro.serving.cluster``) poll performance counters and call
+      :meth:`level_from_counters` / :meth:`plan_chunk_at` — the policy
+      never sees ground-truth pressure there, only the counter sample;
+    * both ask :meth:`order_pending` for the dispatch order.
+    """
     name = "base"
     strict_fcfs = False
 
@@ -73,20 +83,55 @@ class Policy:
                    free_units: int) -> Optional[ChunkPlan]:
         raise NotImplementedError
 
+    def plan_chunk_at(self, task: TaskState, active: list[TaskState],
+                      itf: cm.Interference, now: float,
+                      free_units: int) -> Optional[ChunkPlan]:
+        """Plan the next chunk given an already-estimated pressure ``itf``
+        (the online cluster path: counters -> proxy -> itf -> plan).
+        Static baselines ignore pressure, so the default just forwards to
+        :meth:`plan_chunk` with no demand list."""
+        return self.plan_chunk(task, active, [], now, free_units)
+
     def order_pending(self, pending: list[TaskState],
                       now: float) -> list[TaskState]:
+        """Dispatch order for waiting tasks (default: FCFS by arrival)."""
         return sorted(pending, key=lambda t: t.arrival)
+
+    def interference_from_counters(self,
+                                   sample: CounterSample) -> cm.Interference:
+        """Pressure estimate from one performance-counter read.  Static
+        baselines do not sense pressure at all."""
+        return cm.Interference()
+
+    def level_from_counters(self, sample: CounterSample) -> float:
+        """Interference level the serving engine should compile for, given
+        a live counter sample (the online runtimes call this every
+        scheduling quantum).  Baselines without adaptive compilation pin
+        the solo-tuned code version (level 0)."""
+        return 0.0
 
     def online_level(self, demands: list[RunningDemand],
                      now: float) -> float:
-        """Interference level the online serving engine should compile for
-        right now (repro.serving.runtime queries this every engine step).
-        Static baselines never leave the solo-tuned code version."""
+        """Interference level from oracle demand sums (legacy hook, kept
+        for direct policy probing in tests; the runtimes now synthesize a
+        :class:`~repro.core.interference.CounterSample` and use
+        :meth:`level_from_counters` instead).  Static baselines never
+        leave the solo-tuned code version."""
         return 0.0
 
 
 class VeltairPolicy(Policy):
-    """The full adaptive compiler+scheduler (paper Alg. 3)."""
+    """The full adaptive compiler+scheduler (paper Alg. 3).
+
+    Reproduces: VELTAIR-FULL, plus its two ablations — VELTAIR-AS
+    (``adaptive_compile=False``: dynamic layer-blocks, solo-tuned code)
+    and VELTAIR-AC (``adaptive_schedule=False``: layer-wise dispatch,
+    interference-matched code versions).
+
+    Decision inputs: the proxy-predicted interference (performance
+    counters through :class:`~repro.core.interference.LinearProxy` —
+    never the oracle pressure), the dynamic threshold from the active
+    tenants' ``Avg_C``, and the per-model multi-version tables."""
 
     def __init__(self, hw: cm.HardwareSpec, *, adaptive_schedule: bool = True,
                  adaptive_compile: bool = True, proxy: LinearProxy | None = None,
@@ -106,15 +151,31 @@ class VeltairPolicy(Policy):
 
     def _predict_pressure(self, tid: int, demands: list[RunningDemand],
                           now: float) -> cm.Interference:
-        truth = pressure_on(tid, demands, now, exclude_soon_done=True)
-        counters = synthesize_counters(self.hw, truth, self.rng)
+        sample = read_counters(self.hw, tid, demands, now, self.rng)
         if self.hw.cache_shared:
-            return self.proxy.predict_interference(counters[:2])
-        # TPU platform: the proxy reads bandwidth/link pressure registers
-        # (same linear structure, different sources)
-        pred = self.proxy.predict_interference(counters[:2])
+            return self.interference_from_counters(sample)
+        # TPU platform simulator path: the link-pressure registers are not
+        # part of the synthesized counter vector, so the simulator charges
+        # the realized ICI pressure directly (the bw/cache estimate still
+        # goes through the proxy like the CPU platform)
+        pred = self.interference_from_counters(sample)
         return cm.Interference(cache=0.0, bw=pred.bw,
-                               ici=min(truth.ici, 4.0))
+                               ici=min(sample.truth.ici, 4.0))
+
+    def interference_from_counters(self, sample):
+        pred = self.proxy.predict_interference(
+            np.asarray(sample.values)[:2])
+        if self.hw.cache_shared:
+            return pred
+        # no shared cache on the TPU platform: only the bandwidth estimate
+        # is meaningful (the proxy reads bandwidth-pressure registers of
+        # the same linear structure)
+        return cm.Interference(cache=0.0, bw=pred.bw, ici=0.0)
+
+    def level_from_counters(self, sample):
+        if not self.adaptive_compile:
+            return 0.0        # VELTAIR-AS serves the solo-tuned version
+        return self.interference_from_counters(sample).level
 
     def online_level(self, demands, now):
         if not self.adaptive_compile:
@@ -132,6 +193,9 @@ class VeltairPolicy(Policy):
 
     def plan_chunk(self, task, active, demands, now, free_units):
         itf = self._predicted_itf(task, demands, now)
+        return self.plan_chunk_at(task, active, itf, now, free_units)
+
+    def plan_chunk_at(self, task, active, itf, now, free_units):
         if self.adaptive_schedule:
             thres = self._threshold(task, active)
             blk = lb.next_block(task.plan, task.next_layer, self.hw, itf,
@@ -158,7 +222,14 @@ class VeltairPolicy(Policy):
 
 
 class ModelWisePolicy(Policy):
-    """FCFS whole-model scheduling (prior-work baseline)."""
+    """FCFS whole-model scheduling (the paper's prior-work baseline,
+    Fig. 3/12 "model-wise": one static allocation for the entire model,
+    provisioned at the low-load operating point).
+
+    Decision inputs: the plan's precomputed ``fcfs_units`` only — no
+    pressure sensing, no mid-model re-planning (``strict_fcfs`` keeps the
+    queue in arrival order and a query either gets its full allocation or
+    waits)."""
     name = "model-wise"
     strict_fcfs = True
 
@@ -171,9 +242,14 @@ class ModelWisePolicy(Policy):
 
 
 class LayerWisePolicy(Policy):
-    """Planaria-style spatial layer-wise scheduling ported to the unit pool:
-    per-layer minimal allocation, start-small-and-grow on conflict (the
-    paper charges the measured ~220us respawn overhead for that)."""
+    """Planaria-style spatial layer-wise scheduling (arXiv 2003.04696)
+    ported to the unit pool: per-layer minimal allocation,
+    start-small-and-grow on conflict (the paper charges the measured
+    ~220us respawn overhead for that).
+
+    Decision inputs: the plan's per-layer solo unit requirements — code
+    versions stay solo-tuned and pressure is never sensed; the
+    fine-grained re-planning itself is the (overhead-prone) mechanism."""
     name = "layer-wise"
 
     def plan_chunk(self, task, active, demands, now, free_units):
@@ -186,7 +262,12 @@ class LayerWisePolicy(Policy):
 
 
 class FixedBlockPolicy(Policy):
-    """Static layer-blocks of a fixed size (paper Fig. 3 block-6/block-11)."""
+    """Static layer-blocks of a fixed size (paper Fig. 3's block-6 /
+    block-11 design points): the middle granularities between model-wise
+    and layer-wise that motivate *adaptive* block formation.
+
+    Decision inputs: the constant ``block_size`` and the solo-tuned
+    version table — block boundaries never react to load or pressure."""
 
     def __init__(self, hw, block_size: int):
         super().__init__(hw)
@@ -207,9 +288,13 @@ class FixedBlockPolicy(Policy):
 
 
 class PremaPolicy(Policy):
-    """PREMA-style temporal multiplexing: one task at a time on the whole
-    machine, preemptible at layer boundaries, priority = slack-aware token
-    (longer-waiting, tighter-QoS tasks preempt)."""
+    """PREMA-style temporal multiplexing (arXiv 1909.04548 / the paper's
+    time-sharing baseline): one task at a time on the whole machine,
+    preemptible at layer boundaries.
+
+    Decision inputs: waiting time and QoS slack only (the slack-aware
+    token in :meth:`order_pending`); spatial pressure never exists since
+    execution is exclusive."""
     name = "prema"
 
     def plan_chunk(self, task, active, demands, now, free_units):

@@ -1,9 +1,24 @@
+"""Serving layer: three entry points over the same scheduling core.
+
+* ``repro.serving.simulator`` — discrete-event simulator (analytical
+  latencies, real scheduling decisions; paper-figure experiments);
+* ``repro.serving.runtime`` — single shared real JAX engine with the
+  policy's proxy-driven level in the loop (``OnlineRuntime``);
+* ``repro.serving.cluster`` — N co-located real engines with different
+  models, per-quantum unit partitioning, per-engine levels
+  (``ClusterRuntime``).
+
+See docs/ARCHITECTURE.md for the paper-to-code map.
+"""
 from repro.serving.simulator import SimConfig, Simulator, run_sweep
 from repro.serving.request import (poisson_workload, qos_inverse_weights,
                                    synth_prompts, uniform_workload)
 from repro.serving.runtime import (OnlineRuntime, Workload, plan_demand,
                                    replay_through_simulator)
-from repro.serving.tenants import (build_paper_plans, engine_version_sets,
+from repro.serving.cluster import (ClusterMetrics, ClusterRuntime,
+                                   EngineTenant, build_cluster)
+from repro.serving.tenants import (build_paper_plans, cluster_plan,
+                                   cluster_plans, engine_version_sets,
                                    lm_serving_plans)
 from repro.serving.version_cache import VersionCache, VersionEntry, tiles_key
 
@@ -11,6 +26,8 @@ __all__ = [
     "SimConfig", "Simulator", "run_sweep", "poisson_workload",
     "qos_inverse_weights", "uniform_workload", "synth_prompts",
     "OnlineRuntime", "Workload", "plan_demand", "replay_through_simulator",
-    "build_paper_plans", "engine_version_sets", "lm_serving_plans",
+    "ClusterMetrics", "ClusterRuntime", "EngineTenant", "build_cluster",
+    "build_paper_plans", "cluster_plan", "cluster_plans",
+    "engine_version_sets", "lm_serving_plans",
     "VersionCache", "VersionEntry", "tiles_key",
 ]

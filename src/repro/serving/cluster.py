@@ -1,0 +1,393 @@
+"""Multi-model co-location runtime: N real engines, one unit pool.
+
+This is the piece that turns the repo from "simulator + single-model
+demo" into a multi-tenant serving system: a :class:`ClusterRuntime` runs
+N concurrent :class:`~repro.serving.engine.ServingEngine`\\ s serving
+*different* model architectures (e.g. gemma-2b next to starcoder2-3b
+next to mamba2-780m, each a reduced real JAX model), partitions
+``hw.n_units`` across them every scheduling quantum through the shared
+:class:`~repro.core.allocator.UnitPool`, and drives a **per-engine**
+interference level through each engine's precompiled
+:class:`~repro.serving.version_cache.VersionCache`.
+
+The paper's runtime loop, on the real execution path:
+
+1. **Sense** — for each engine (the "victim"), synthesize a
+   :class:`~repro.core.interference.CounterSample` from the live slot
+   occupancy of its co-resident engines (what the performance counters
+   would read) — :func:`~repro.core.interference.read_counters`.
+2. **Estimate** — the policy maps the counter sample to a pressure
+   estimate through its calibrated
+   :class:`~repro.core.interference.LinearProxy`
+   (``Policy.interference_from_counters``).  Ground-truth demand sums
+   are never consulted online; they only exist inside the counter
+   synthesizer and the offline calibration pass.
+3. **Plan** — ``Policy.plan_chunk_at`` forms the next layer-block at
+   that pressure (Alg. 2/3): the block's size becomes the engine's
+   *dispatch quantum* (decode steps until the next scheduling
+   intervention) and its unit requirement becomes the engine's share of
+   the pool — so adaptive granularity, not just adaptive compilation,
+   governs the real JAX path.  Baselines plug into the same loop:
+   model-wise FCFS re-plans once per model pass, fixed-block every K
+   steps, PREMA runs exclusively one quantum at a time.
+4. **Act** — the engine's grant is (re)allocated work-conservingly from
+   the pool and ``set_interference_level`` swaps the engine to the code
+   version compiled for the estimated pressure (a dictionary swap of
+   precompiled executables after :meth:`ClusterRuntime.warmup`).
+
+Time: a virtual clock advances ``step_dt`` per tick; every engine with a
+grant runs one batched decode step per tick until its quantum expires.
+``wall_clock=True`` charges measured wall time instead (version-switch
+stalls included, as in ``OnlineRuntime``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.allocator import UnitPool
+from repro.core.interference import RunningDemand, read_counters
+from repro.core.layer_block import ModelPlan
+from repro.core.qos import QueryRecord, ServingMetrics, summarize
+from repro.core.scheduler import Policy, TaskState
+from repro.serving.engine import ServingEngine, Request
+from repro.serving.request import synth_prompts
+from repro.serving.runtime import Workload, plan_demand
+from repro.serving.tenants import cluster_plans
+
+
+@dataclasses.dataclass
+class EngineTenant:
+    """One co-located tenant: a real engine plus its analytic plan.
+
+    ``engine`` executes the (reduced) JAX model; ``plan`` is the
+    compile-time artifact the scheduler reasons with (version tables,
+    QoS slices, ``Avg_C``) — the same pairing the single-engine
+    ``OnlineRuntime`` uses, replicated per model."""
+    name: str
+    engine: ServingEngine
+    plan: ModelPlan
+
+
+@dataclasses.dataclass
+class _TenantState:
+    """Mutable per-tenant serving state (grants, quanta, queues)."""
+    pending: collections.deque = dataclasses.field(
+        default_factory=collections.deque)
+    grant: int = 0                 # units currently held from the pool
+    quantum_left: int = 0          # decode steps before the next re-plan
+    cursor: int = 0                # layer-block cursor into plan.layers
+    oldest_admit: float = 0.0      # head-of-line admit time (priority)
+    levels: list = dataclasses.field(default_factory=list)
+    quanta: int = 0                # re-plan count
+    busy: float = 0.0              # occupancy-weighted unit-time
+    alloc: float = 0.0             # granted unit-time
+    records: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ClusterMetrics:
+    """Co-location serve result: aggregate + per-tenant ServingMetrics,
+    plus the scheduling traces the tests/benchmarks assert on."""
+    aggregate: ServingMetrics
+    per_tenant: dict[str, ServingMetrics]
+    level_traces: dict[str, list[float]]     # per-quantum engine levels
+    partition_trace: list[dict[str, int]]    # per-tick unit grants
+    quanta: dict[str, int]                   # re-plan counts
+    pool_conflicts: int                      # grants below QoS minimum
+    pool_peak_used: int
+
+    @property
+    def mean_levels(self) -> dict[str, float]:
+        return {n: float(np.mean(tr)) if tr else 0.0
+                for n, tr in self.level_traces.items()}
+
+
+def build_cluster(archs: list[str], hw: cm.HardwareSpec, *,
+                  batch_slots: int = 2, max_len: int = 32,
+                  qos_scale: float = 3.0, seed: int = 0,
+                  plans: dict[str, ModelPlan] | None = None,
+                  ) -> list[EngineTenant]:
+    """Stand up one reduced real engine per architecture.
+
+    Each engine gets its own params, KV/SSM cache, version cache, and —
+    through ``version_sets`` from its *own* plan — its own
+    adaptive-compiled tile table, so per-engine levels select per-model
+    code versions."""
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+
+    plans = plans or cluster_plans(list(archs), hw, qos_scale=qos_scale)
+    out = []
+    for i, arch in enumerate(archs):
+        cfg = get_reduced_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed + i))
+        engine = ServingEngine(cfg, params, batch_slots=batch_slots,
+                               max_len=max_len,
+                               version_sets=plans[arch].version_sets)
+        out.append(EngineTenant(name=arch, engine=engine, plan=plans[arch]))
+    return out
+
+
+class ClusterRuntime:
+    """Admission/partition/dispatch loop over N co-located real engines.
+
+    Knobs: ``step_dt`` (virtual seconds per decode tick),
+    ``wall_clock`` (charge measured step+switch wall time instead),
+    ``max_steps`` (tick budget), ``seed`` (counter-read noise).  The
+    policy instance is shared — it is the *global* scheduler regulating
+    all tenants, exactly as in the paper; per-engine behavior differs
+    because each engine's counter read sees different co-runners."""
+
+    def __init__(self, tenants: list[EngineTenant], policy: Policy,
+                 hw: cm.HardwareSpec, *, step_dt: float = 1e-3,
+                 wall_clock: bool = False, max_steps: int = 200_000,
+                 seed: int = 0):
+        if len({t.name for t in tenants}) != len(tenants):
+            raise ValueError("tenant names must be unique")
+        self.tenants = list(tenants)
+        self.policy = policy
+        self.hw = hw
+        self.step_dt = step_dt
+        self.wall_clock = wall_clock
+        self.max_steps = max_steps
+        self.pool = UnitPool(hw.n_units)
+        self.ticks = 0
+        self.conflicts = 0               # admission rejections (engine full)
+        self.tenant_conflicts = {t.name: 0 for t in self.tenants}
+        self.compile_time_s = 0.0        # wall time inside level switches
+        self.partition_trace: list[dict[str, int]] = []
+        self._rng = np.random.default_rng(seed)
+        self._state = {t.name: _TenantState() for t in self.tenants}
+        self._demand_cache: dict[tuple[str, int], tuple] = {}
+
+    # ------------------------------------------------------------------
+    def warmup(self, prompt_lens: tuple[int, ...] = ()) -> dict:
+        """AOT-compile every engine's full level table (level switches
+        during serve() become dictionary swaps).  Returns per-tenant
+        version-cache stats."""
+        return {t.name: t.engine.warmup(prompt_lens=prompt_lens)
+                for t in self.tenants}
+
+    def _footprint(self, tenant: EngineTenant, units: int) -> tuple:
+        key = (tenant.name, units)
+        hit = self._demand_cache.get(key)
+        if hit is None:
+            hit = plan_demand(tenant.plan, self.hw, max(1, units))
+            self._demand_cache[key] = hit
+        return hit
+
+    def _live_demands(self, meta: dict, now: float) -> list[RunningDemand]:
+        """One RunningDemand per occupied slot across all engines — the
+        live-occupancy picture the counter synthesizer reads.  Slot
+        footprints are evaluated at the engine's current grant (fair
+        share before its first grant)."""
+        fair = max(1, self.hw.n_units // max(len(self.tenants), 1))
+        out = []
+        for idx, t in enumerate(self.tenants):
+            st = self._state[t.name]
+            bw, cache, ici = self._footprint(t, st.grant or fair)
+            for req in t.engine.slot_req:
+                if req is None:
+                    continue
+                _, _, admit = meta[req.rid]
+                horizon = admit + self.step_dt * (req.max_new_tokens + 1)
+                out.append(RunningDemand(
+                    tenant=idx, bw=bw, cache=cache, ici=ici, start=admit,
+                    finish=max(horizon, now + self.step_dt)))
+        return out
+
+    def _task(self, idx: int, tenant: EngineTenant) -> TaskState:
+        st = self._state[tenant.name]
+        return TaskState(tid=idx, tenant=tenant.name, plan=tenant.plan,
+                         arrival=st.oldest_admit, next_layer=st.cursor)
+
+    def _release(self, st: _TenantState) -> None:
+        if st.grant:
+            self.pool.release(st.grant)
+            st.grant = 0
+        st.quantum_left = 0
+
+    # ------------------------------------------------------------------
+    def _replan(self, idx: int, tenant: EngineTenant,
+                active_tasks: list[TaskState],
+                demands: list[RunningDemand], now: float) -> None:
+        """One scheduling quantum decision for ``tenant``: counters ->
+        proxy -> layer-block plan -> pool grant + engine code version."""
+        st = self._state[tenant.name]
+        sample = read_counters(self.hw, idx, demands, now, self._rng)
+        itf = self.policy.interference_from_counters(sample)
+        task = self._task(idx, tenant)
+        plan = self.policy.plan_chunk_at(task, active_tasks, itf, now,
+                                         self.pool.free)
+        if plan is None:
+            return
+        if plan.exclusive and self.pool.used > 0:
+            return                        # temporal policy: wait for idle
+        desired = max(1, min(plan.units, self.hw.n_units))
+        lo = max(1, min(plan.units_min, desired))
+        if not plan.allow_partial:
+            if self.pool.free < desired:
+                return                    # all-or-nothing: stall this tick
+            grant = self.pool.try_alloc(desired)
+        else:
+            grant = self.pool.try_alloc_range(lo, desired)
+            if grant == 0:
+                return                    # pool exhausted: stall this tick
+        st.grant = grant
+        st.quantum_left = max(plan.end_layer - task.next_layer, 1)
+        st.cursor = plan.end_layer % tenant.plan.n_layers
+        st.quanta += 1
+        level = self.policy.level_from_counters(sample)
+        t0 = time.perf_counter()
+        tenant.engine.set_interference_level(level)
+        self.compile_time_s += time.perf_counter() - t0
+        st.levels.append(level)
+
+    # ------------------------------------------------------------------
+    def serve(self, wl: Workload) -> ClusterMetrics:
+        """Replay ``wl`` through the co-located engines.  Arrival tenant
+        names must match EngineTenant names (each query runs on its own
+        model's engine)."""
+        by_name = {t.name: t for t in self.tenants}
+        unknown = {name for _, name in wl.arrivals} - set(by_name)
+        if unknown:
+            raise KeyError(f"workload tenants {sorted(unknown)} have no "
+                           f"engine; cluster serves {sorted(by_name)}")
+        lens = wl.prompt_lengths()
+        prompts = {t.name: synth_prompts(wl.n_queries, wl.prompt_len,
+                                         t.engine.cfg.vocab_size, wl.seed)
+                   for t in self.tenants}
+        arrivals = collections.deque(
+            (at, name, rid) for rid, (at, name)
+            in enumerate(sorted(wl.arrivals)))
+        meta: dict[int, tuple[str, float, float]] = {}
+        rejected: set[int] = set()
+        now = 0.0
+
+        def admit(t: EngineTenant) -> None:
+            st = self._state[t.name]
+            while st.pending:
+                at, rid = st.pending[0]
+                req = Request(rid=rid,
+                              prompt=prompts[t.name][rid, :lens[rid]],
+                              max_new_tokens=wl.max_new_tokens)
+                if not t.engine.add_request(req):
+                    if rid not in rejected:       # QoS conflict, once/query
+                        rejected.add(rid)
+                        self.conflicts += 1
+                        self.tenant_conflicts[t.name] += 1
+                    break
+                meta[rid] = (t.name, at, now)
+                st.pending.popleft()
+            active = [meta[r.rid][2] for r in t.engine.slot_req
+                      if r is not None]
+            st.oldest_admit = min(active) if active else now
+
+        while arrivals or any(self._state[t.name].pending
+                              or t.engine.active_slots
+                              for t in self.tenants):
+            if self.ticks >= self.max_steps:
+                break
+            while arrivals and arrivals[0][0] <= now:
+                at, name, rid = arrivals.popleft()
+                self._state[name].pending.append((at, rid))
+            for t in self.tenants:
+                admit(t)
+
+            active = [t for t in self.tenants if t.engine.active_slots]
+            if not active:
+                if arrivals:                 # idle: jump to next arrival
+                    now = max(now, arrivals[0][0])
+                    continue
+                break
+
+            # grants of engines that drained their slots go back first
+            for t in self.tenants:
+                if not t.engine.active_slots:
+                    self._release(self._state[t.name])
+
+            t_tick = time.perf_counter()
+            demands = self._live_demands(meta, now)
+            active_tasks = [self._task(i, t)
+                            for i, t in enumerate(self.tenants)
+                            if t.engine.active_slots]
+            need = [task for task in active_tasks
+                    if self._state[task.tenant].grant == 0]
+            for task in self.policy.order_pending(need, now):
+                self._replan(task.tid, self.tenants[task.tid],
+                             active_tasks, demands, now)
+
+            self.partition_trace.append(
+                {t.name: self._state[t.name].grant for t in self.tenants})
+
+            finished: list[tuple[str, Request]] = []
+            held: list[tuple[_TenantState, int, float]] = []
+            for t in active:
+                st = self._state[t.name]
+                if st.grant == 0:
+                    # stalled this tick (pool exhausted / exclusive quantum
+                    # pending); time still advances below, so the next tick
+                    # re-plans instead of spinning
+                    continue
+                held.append((st, st.grant,
+                             t.engine.active_slots / t.engine.slots))
+                for req in t.engine.step():
+                    finished.append((t.name, req))
+                st.quantum_left -= 1
+                if st.quantum_left <= 0 or not t.engine.active_slots:
+                    self._release(st)
+
+            dt = (time.perf_counter() - t_tick) if self.wall_clock \
+                else self.step_dt
+            self.ticks += 1
+            now += dt
+            # unit-time accounting uses the same dt as the clock, so
+            # summarize()'s avg_units/efficiency stay consistent in both
+            # virtual and wall_clock modes
+            for st, grant, occupancy in held:
+                st.busy += grant * dt * occupancy
+                st.alloc += grant * dt
+            for name, req in finished:
+                _, at, _ = meta[req.rid]
+                st = self._state[name]
+                st.records.append(QueryRecord(
+                    tenant=name, arrival=at, finish=now,
+                    qos_s=by_name[name].plan.qos_s))
+
+        for t in self.tenants:               # return whatever is still held
+            self._release(self._state[t.name])
+
+        span = max((wl.arrivals[-1][0] if wl.arrivals else 0.0), 1e-9)
+        per_tenant = {}
+        all_records: list[QueryRecord] = []
+        busy = alloc = 0.0
+        for t in self.tenants:
+            st = self._state[t.name]
+            n_t = sum(1 for _, name in wl.arrivals if name == t.name)
+            per_tenant[t.name] = summarize(
+                st.records, n_t / span,
+                self.tenant_conflicts[t.name] / max(n_t, 1),
+                st.busy, st.alloc)
+            all_records.extend(st.records)
+            busy += st.busy
+            alloc += st.alloc
+        aggregate = summarize(all_records, wl.qps,
+                              self.conflicts / max(wl.n_queries, 1),
+                              busy, alloc)
+        return ClusterMetrics(
+            aggregate=aggregate, per_tenant=per_tenant,
+            level_traces={t.name: list(self._state[t.name].levels)
+                          for t in self.tenants},
+            partition_trace=list(self.partition_trace),
+            quanta={t.name: self._state[t.name].quanta
+                    for t in self.tenants},
+            pool_conflicts=self.pool.conflicts,
+            pool_peak_used=self.pool.peak_used)

@@ -157,6 +157,13 @@ class ServingEngine:
                 lg.block_until_ready()
         return dict(self.version_cache.stats)
 
+    @property
+    def active_slots(self) -> int:
+        """Occupied request slots right now (the cluster runtime's live
+        occupancy signal: co-runner demand is synthesized per occupied
+        slot, so this is what the interference counters 'see')."""
+        return sum(r is not None for r in self.slot_req)
+
     # ------------------------------------------------------------------
     def _free_slot(self) -> int | None:
         for i, r in enumerate(self.slot_req):

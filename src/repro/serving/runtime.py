@@ -5,11 +5,14 @@ The discrete-event simulator (serving.simulator) exercises the decision
 layer against an analytical cost model; this module closes the loop on
 the *real* engine: per-tenant request queues feed a shared
 :class:`~repro.serving.engine.ServingEngine`, and at every engine step
-the scheduling policy is asked for the current interference level —
-derived from the co-running tenants' analytical resource demands, through
-the same proxy path the simulator uses — and the engine swaps to the
-matching code version via ``set_interference_level`` (kernel tile
-overrides, repro.kernels.dispatch).
+the runtime polls the (synthesized) performance counters for the live
+slot occupancy and asks the scheduling policy to map them to an
+interference level — counters through the calibrated
+:class:`~repro.core.interference.LinearProxy`, never the oracle demand
+sums — and the engine swaps to the matching code version via
+``set_interference_level`` (kernel tile overrides,
+repro.kernels.dispatch).  For N co-located engines with *different*
+models sharing one unit pool, see :class:`repro.serving.cluster.ClusterRuntime`.
 
 A :class:`Workload` is the shared currency: the same (arrival, tenant)
 stream replays through both the simulator (``replay_through_simulator``)
@@ -31,7 +34,7 @@ import dataclasses
 import time
 
 from repro.core import cost_model as cm
-from repro.core.interference import RunningDemand
+from repro.core.interference import RunningDemand, read_counters
 from repro.core.layer_block import ModelPlan
 from repro.core.qos import QueryRecord, ServingMetrics, summarize
 from repro.core.scheduler import Policy
@@ -118,7 +121,7 @@ class OnlineRuntime:
     def __init__(self, engine: ServingEngine, policy: Policy,
                  plans: dict[str, ModelPlan], hw: cm.HardwareSpec, *,
                  step_dt: float = 1e-3, wall_clock: bool = False,
-                 max_steps: int = 200_000):
+                 max_steps: int = 200_000, seed: int = 0):
         self.engine = engine
         self.policy = policy
         self.plans = plans
@@ -126,6 +129,8 @@ class OnlineRuntime:
         self.step_dt = step_dt
         self.wall_clock = wall_clock
         self.max_steps = max_steps
+        import numpy as np
+        self._rng = np.random.default_rng(seed)   # counter-read noise
         self.records: list[QueryRecord] = []
         self.level_trace: list[float] = []
         self.conflicts = 0
@@ -189,15 +194,20 @@ class OnlineRuntime:
                     break
                 meta[rid] = (tenant, t, now)
                 pending.popleft()
-            n_active = sum(r is not None for r in self.engine.slot_req)
+            n_active = self.engine.active_slots
             if n_active == 0:
                 if arrivals:                 # idle: jump to next arrival
                     now = max(now, arrivals[0][0])
                     continue
                 break
 
+            # the counter loop: synthesize what the performance counters
+            # would read under the live slot occupancy; the policy maps the
+            # sample to a level through its calibrated proxy (victim=-1:
+            # the engine observes the full co-runner pressure)
             demands = self._active_demands(meta, now)
-            level = self.policy.online_level(demands, now)
+            sample = read_counters(self.hw, -1, demands, now, self._rng)
+            level = self.policy.level_from_counters(sample)
             # the step timer starts BEFORE the version switch: any re-jit /
             # compile the switch triggers is real serving latency (the very
             # overhead adaptive compilation amortizes) and must be charged

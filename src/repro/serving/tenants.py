@@ -1,4 +1,18 @@
-"""Tenant setup: compile paper-suite / LM-arch models into ModelPlans."""
+"""Tenant setup: compile paper-suite / LM-arch models into ModelPlans.
+
+A *tenant* is a model with a QoS target; its :class:`ModelPlan` is the
+compile-time artifact every scheduling policy works from (per-layer
+version tables, QoS slices, ``Avg_C``).  Three builders cover the three
+serving paths:
+
+* :func:`build_paper_plans` — the paper's MLPerf CNN suite (simulator
+  and single-engine online runtime);
+* :func:`lm_serving_plans` — LM architectures on the TPU-pod hardware
+  (analytic pod-scale scenarios);
+* :func:`cluster_plan` — LM architectures on *either* platform with an
+  auto-derived feasible QoS, used by ``repro.serving.cluster`` to
+  co-locate heterogeneous real engines on one unit pool.
+"""
 from __future__ import annotations
 
 import functools
@@ -43,6 +57,34 @@ def lm_serving_plans(specs: list[tuple[str, str, float]],
                      ) -> dict[str, ModelPlan]:
     """specs: [(arch, shape_name, qos_ms)] -> plans keyed arch:shape."""
     return {f"{a}:{s}": lm_plan(a, s, q) for a, s, q in specs}
+
+
+@functools.lru_cache(maxsize=None)
+def cluster_plan(arch: str, hw: cm.HardwareSpec = cm.CPU_3990X, *,
+                 qos_scale: float = 3.0,
+                 shape_name: str = "decode_32k") -> ModelPlan:
+    """Analytic ModelPlan for one co-located LM engine tenant, compiled
+    for exactly the hardware the cluster will partition (``hw`` is a
+    frozen dataclass, so memoization keys on the actual spec).
+
+    Unlike :func:`lm_plan` this works on any platform and derives a
+    *feasible* QoS instead of taking one: the versions are compiled
+    first, then ``qos_s = qos_scale x`` the model's solo full-machine
+    latency — so heterogeneous models (gemma_2b next to mamba2_780m)
+    all get proportionate targets and the co-location comparison measures
+    scheduling quality, not QoS mis-calibration."""
+    cfg = get_config(arch)
+    layers = lm_layers(cfg, get_shape(shape_name))
+    vsets = compile_model(layers, hw)
+    solo = sum(cm.latency(hw, vs.solo_version(), hw.n_units,
+                          cm.Interference()) for vs in vsets)
+    return make_model_plan(arch, layers, vsets, qos_scale * solo, hw)
+
+
+def cluster_plans(archs: list[str], hw: cm.HardwareSpec, *,
+                  qos_scale: float = 3.0) -> dict[str, ModelPlan]:
+    """archs -> plans keyed by arch name (repro.serving.cluster input)."""
+    return {a: cluster_plan(a, hw, qos_scale=qos_scale) for a in archs}
 
 
 def engine_version_sets(plans: dict[str, ModelPlan]) -> list:

@@ -1,0 +1,75 @@
+"""Docs gate: every module path referenced in docs/ARCHITECTURE.md (and
+README.md) must import, and every ``repro.module:Symbol`` reference must
+resolve via getattr.  Run from the repo root:
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Exit code 0 = all references importable; 1 = any broken reference (each
+is printed).  CI runs this in the fast job so the paper-to-code map can
+never drift from the codebase silently.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = [ROOT / "docs" / "ARCHITECTURE.md", ROOT / "README.md"]
+
+# `repro.pkg.mod` or `repro.pkg.mod:Symbol` inside backticks
+REF = re.compile(r"`(repro(?:\.[A-Za-z0-9_]+)+)(?::([A-Za-z0-9_]+))?`")
+
+
+def check(path: pathlib.Path) -> list[str]:
+    errors = []
+    seen: set[tuple[str, str | None]] = set()
+    for mod, sym in REF.findall(path.read_text()):
+        key = (mod, sym or None)
+        if key in seen:
+            continue
+        seen.add(key)
+        try:
+            m = importlib.import_module(mod)
+        except ModuleNotFoundError:
+            # prose often writes `repro.pkg.mod.Symbol` — accept the last
+            # dotted component as an attribute of the parent module
+            parent, _, attr = mod.rpartition(".")
+            try:
+                m = importlib.import_module(parent)
+            except Exception as e:                  # noqa: BLE001
+                errors.append(f"{path.name}: `{mod}` does not import: "
+                              f"{e!r}")
+                continue
+            if not hasattr(m, attr):
+                errors.append(f"{path.name}: `{mod}` — neither a module "
+                              f"nor an attribute of {parent}")
+                continue
+        except Exception as e:                      # noqa: BLE001
+            errors.append(f"{path.name}: `{mod}` does not import: {e!r}")
+            continue
+        if sym and not hasattr(m, sym):
+            errors.append(f"{path.name}: `{mod}:{sym}` — module imports "
+                          f"but has no attribute {sym!r}")
+    print(f"{path.name}: {len(seen)} module references checked")
+    return errors
+
+
+def main() -> int:
+    missing = [d for d in DOCS if not d.exists()]
+    if missing:
+        for d in missing:
+            print(f"MISSING doc file: {d}")
+        return 1
+    errors = [e for d in DOCS for e in check(d)]
+    for e in errors:
+        print("BROKEN:", e)
+    if errors:
+        return 1
+    print("docs gate: all module references importable")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

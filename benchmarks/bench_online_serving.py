@@ -24,10 +24,29 @@ Sections:
                                    levels, re-plan quanta and peak units —
                                    the VELTAIR-vs-baselines co-location
                                    comparison on the real engine path
+  * quantum/<mode>_tok_s           warm decode throughput of the SAME
+                                   workload through the per-step dispatch
+                                   loop (one host sync per token) vs the
+                                   fused quantum path (one executable and
+                                   one sync per layer-block quantum);
+                                   derived column reports p50/p99 latency,
+                                   host syncs per token and tokens per
+                                   sync — the numbers also land in
+                                   BENCH_serving.json at the repo root,
+                                   which tools/check_bench.py gates in CI
+
+Run ``python -m benchmarks.bench_online_serving --tiny`` for the
+CI-sized run: the quantum section only, with a small workload, still
+producing BENCH_serving.json.
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import sys
 import time
+
+import numpy as np
 
 from benchmarks.common import HW, emit
 from repro.core.scheduler import (FixedBlockPolicy, ModelWisePolicy,
@@ -39,6 +58,8 @@ from repro.serving import (ClusterRuntime, OnlineRuntime, Workload,
 TENANTS = ["resnet50", "googlenet"]
 N_QUERIES = 24
 CLUSTER_ARCHS = ["gemma-2b", "starcoder2-3b", "mamba2-780m"]
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_serving.json"
 
 
 def _engine(plans):
@@ -135,13 +156,110 @@ def colocation_policies():
              f"peak_units={m.pool_peak_used};{levels}")
 
 
+def quantum_dispatch(plans, *, n_queries: int = N_QUERIES,
+                     repeats: int = 3) -> dict:
+    """Fused dispatch quanta vs the per-step loop on identical traffic.
+
+    Both engines are fully warmed (level table + K-buckets + the
+    admission row-writer via a throwaway warm request), so the measured
+    gap is pure dispatch granularity: Python call + device->host sync per
+    token vs one fused executable + one sync per quantum.  Each arm is
+    measured ``repeats`` times and the best run kept (best-of filters
+    transient machine load — the CI gate compares these numbers, so they
+    must reflect the dispatch path, not a noisy neighbor).  Returns the
+    machine-readable section written to BENCH_serving.json."""
+    from repro.serving.engine import Request
+
+    wl = Workload.poisson(TENANTS, 60, n_queries, prompt_len=4,
+                          max_new_tokens=8, seed=1)
+    arms = (("per_step", False), ("fused", True))
+    engines: dict = {}
+    for name, fused in arms:
+        engine = _engine(plans)
+        # the per-step arm never dispatches a fused quantum: skip its
+        # (dead-weight) K-bucket AOT builds
+        engine.warmup(prompt_lens=(wl.prompt_len,),
+                      quantum_buckets=None if fused else ())
+        # warm the admission path too (row-writer jit + prefill argmax)
+        rng = np.random.default_rng(0)
+        warm = Request(rid=-1, prompt=rng.integers(
+            0, engine.cfg.vocab_size, wl.prompt_len).astype(np.int32),
+            max_new_tokens=2)
+        engine.run_to_completion([warm])
+        engines[name] = engine
+
+    def measure(name: str, fused: bool) -> dict:
+        engine = engines[name]
+        toks0, syncs0 = engine.tokens_decoded, engine.host_syncs
+        runtime = OnlineRuntime(engine, VeltairPolicy(HW), plans, HW,
+                                wall_clock=True, fused=fused)
+        t0 = time.time()
+        m = runtime.serve(wl)
+        wall = time.time() - t0
+        toks = engine.tokens_decoded - toks0
+        syncs = engine.host_syncs - syncs0
+        lats = np.array([r.latency for r in runtime.records])
+        return {
+            "tokens": int(toks),
+            "wall_s": round(wall, 4),
+            "tokens_per_s": round(toks / max(wall, 1e-9), 1),
+            "host_syncs": int(syncs),
+            "syncs_per_token": round(syncs / max(toks, 1), 4),
+            "tokens_per_sync": round(toks / max(syncs, 1), 2),
+            "p50_latency_ms": round(1e3 * float(np.percentile(lats, 50)), 2),
+            "p99_latency_ms": round(1e3 * float(np.percentile(lats, 99)), 2),
+            "qos_rate": round(m.qos_rate, 3),
+            "quanta": int(runtime.quanta),
+        }
+
+    # interleave the arms' repeats so a transient load spike on a shared
+    # CI runner hits both arms, not every sample of one — best-of can't
+    # filter noise that is correlated within an arm
+    section: dict = {}
+    for _ in range(max(repeats, 1)):
+        for name, fused in arms:
+            run = measure(name, fused)
+            if name not in section or \
+                    run["tokens_per_s"] > section[name]["tokens_per_s"]:
+                section[name] = run
+    for name, _ in arms:
+        emit(f"quantum/{name}_tok_s", section[name]["tokens_per_s"],
+             f"p50_ms={section[name]['p50_latency_ms']};"
+             f"p99_ms={section[name]['p99_latency_ms']};"
+             f"syncs_per_tok={section[name]['syncs_per_token']};"
+             f"tok_per_sync={section[name]['tokens_per_sync']}")
+    section["speedup_tokens_per_s"] = round(
+        section["fused"]["tokens_per_s"]
+        / max(section["per_step"]["tokens_per_s"], 1e-9), 2)
+    emit("quantum/fused_speedup_x", section["speedup_tokens_per_s"],
+         "fused vs per-step warm decode throughput")
+    return section
+
+
+def write_bench_json(quantum: dict, mode: str) -> None:
+    BENCH_JSON.write_text(json.dumps(
+        {"bench": "online_serving", "mode": mode, "quantum": quantum},
+        indent=2) + "\n")
+    print(f"# wrote {BENCH_JSON}", flush=True)
+
+
 def run_all():
     plans = build_paper_plans(TENANTS, HW)
     online_policies(plans)
     level_switch_cost(plans)
     colocation_policies()
+    write_bench_json(quantum_dispatch(plans), "full")
+
+
+def run_tiny():
+    """CI-sized run: the quantum fused-vs-per-step comparison only.
+    More repeats than the full run — the CI gate compares these numbers
+    on noisy shared runners, so best-of needs extra samples."""
+    plans = build_paper_plans(TENANTS, HW)
+    write_bench_json(quantum_dispatch(plans, n_queries=16, repeats=5),
+                     "tiny")
 
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    run_all()
+    run_tiny() if "--tiny" in sys.argv[1:] else run_all()

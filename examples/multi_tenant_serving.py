@@ -87,7 +87,9 @@ def online_engine_demo(hw):
 
     lv = runtime.level_trace
     print(f"\nonline runtime: {m_eng.n_queries} queries through the real "
-          f"engine in {wall:.1f}s wall ({runtime.steps} decode steps, "
+          f"engine in {wall:.1f}s wall ({runtime.steps} decode steps in "
+          f"{runtime.quanta} fused dispatch quanta, "
+          f"{engine.tokens_per_sync:.1f} tokens per host sync, "
           f"{engine.level_switches} version switches, "
           f"{1e3 * runtime.compile_time_s:.1f}ms in switches, "
           f"version cache {engine.version_cache.stats}, interference level "

@@ -33,6 +33,14 @@ from repro.models.params import ParamSpec, abstract_params, init_params
 PyTree = Any
 
 
+def cache_batch_axis(path) -> int:
+    """Batch axis of a cache leaf: scanned block caches carry a leading
+    layer axis, so batch is axis 1 under the ``blocks`` subtree and
+    axis 0 everywhere else.  Shared by the serving engine's row
+    slice/write helpers and the fused-quantum row masking."""
+    return 1 if any(getattr(p, "key", None) == "blocks" for p in path) else 0
+
+
 def stack_specs(tree: PyTree, n: int) -> PyTree:
     return jax.tree_util.tree_map(
         lambda s: ParamSpec((n,) + s.shape, s.dtype, ("layers",) + s.axes,
@@ -467,6 +475,57 @@ class Model:
         x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
         logits = L.unembed(params["embed"], x, cfg)
         return logits[:, 0], new_cache
+
+    @staticmethod
+    def select_cache_rows(live: jax.Array, new_cache: PyTree,
+                          old_cache: PyTree) -> PyTree:
+        """Per-row cache select: rows where ``live`` is True take
+        ``new_cache``, frozen rows keep ``old_cache`` bit-exact.  This is
+        what lets a fused multi-step decode freeze finished slots: a
+        frozen row's recurrent state (SSM/RG-LRU) and KV writes are fully
+        reverted, so its cache is indistinguishable from one that was
+        never stepped."""
+        def sel(path, n, o):
+            shape = [1] * n.ndim
+            shape[cache_batch_axis(path)] = live.shape[0]
+            return jnp.where(live.reshape(shape), n, o).astype(o.dtype)
+        return jax.tree_util.tree_map_with_path(sel, new_cache, old_cache)
+
+    def decode_quantum(self, params, tokens, cache, pos, n_left, k: int):
+        """Fused on-device decode of up to ``k`` greedy tokens per row.
+
+        A ``lax.scan`` over :meth:`decode_step` — the whole dispatch
+        quantum runs as ONE executable with on-device argmax sampling, so
+        the host syncs once per quantum instead of once per token.
+
+        Args: ``tokens`` (B,) int32 last-sampled token per row; ``pos``
+        (B,) int32 absolute positions; ``n_left`` (B,) int32 per-row step
+        budget (rows stop advancing after their budget: token, position
+        and cache all freeze, so mid-quantum completions and slots
+        shorter than the quantum stay exact).  ``k`` is static — the
+        serving layer compiles one executable per K-bucket.
+
+        Returns ``(block (k, B) int32, cache, pos)``; column ``i`` of
+        ``block`` is valid for the first ``n_left[i]`` rows.
+        """
+        def body(carry, j):
+            toks, cache_c, pos_c = carry
+            logits, new_cache = self.decode_step(
+                params, {"tokens": toks}, cache_c, pos_c)
+            live = j < n_left
+            nxt = jnp.where(live,
+                            jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                            toks)
+            new_cache = self.select_cache_rows(live, new_cache, cache_c)
+            pos_c = jnp.where(live, pos_c + 1, pos_c)
+            return (nxt, new_cache, pos_c), nxt
+
+        (_, cache, pos), block = jax.lax.scan(
+            body,
+            (jnp.asarray(tokens, jnp.int32), cache,
+             jnp.asarray(pos, jnp.int32)),
+            jnp.arange(int(k), dtype=jnp.int32))
+        return block, cache, pos
 
 
 @functools.lru_cache(maxsize=None)

@@ -34,11 +34,20 @@ The paper's runtime loop, on the real execution path:
    the pool and ``set_interference_level`` swaps the engine to the code
    version compiled for the estimated pressure (a dictionary swap of
    precompiled executables after :meth:`ClusterRuntime.warmup`).
+5. **Dispatch** — in fused mode (default) each granted engine's whole
+   quantum runs as ONE on-device executable
+   (:meth:`~repro.serving.engine.ServingEngine.begin_quantum`), and the
+   tick issues every engine's quantum *before* blocking on any of them
+   (:meth:`~repro.serving.engine.ServingEngine.finish_quantum`), so
+   co-located engines' device work overlaps instead of serializing
+   through Python — one host sync per engine per quantum.
 
-Time: a virtual clock advances ``step_dt`` per tick; every engine with a
-grant runs one batched decode step per tick until its quantum expires.
+Time: a virtual clock advances ``step_dt`` per executed decode step —
+in fused mode a tick spans the longest quantum it dispatched, and
+completions inside a quantum keep exact per-step virtual finish times.
 ``wall_clock=True`` charges measured wall time instead (version-switch
-stalls included, as in ``OnlineRuntime``).
+stalls included, as in ``OnlineRuntime``).  ``fused=False`` restores the
+per-step dispatch loop (the measured baseline).
 """
 from __future__ import annotations
 
@@ -100,6 +109,9 @@ class ClusterMetrics:
     quanta: dict[str, int]                   # re-plan counts
     pool_conflicts: int                      # grants below QoS minimum
     pool_peak_used: int
+    host_syncs: dict[str, int] = dataclasses.field(default_factory=dict)
+    tokens_per_sync: dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def mean_levels(self) -> dict[str, float]:
@@ -149,7 +161,7 @@ class ClusterRuntime:
     def __init__(self, tenants: list[EngineTenant], policy: Policy,
                  hw: cm.HardwareSpec, *, step_dt: float = 1e-3,
                  wall_clock: bool = False, max_steps: int = 200_000,
-                 seed: int = 0):
+                 seed: int = 0, fused: bool = True):
         if len({t.name for t in tenants}) != len(tenants):
             raise ValueError("tenant names must be unique")
         self.tenants = list(tenants)
@@ -158,6 +170,7 @@ class ClusterRuntime:
         self.step_dt = step_dt
         self.wall_clock = wall_clock
         self.max_steps = max_steps
+        self.fused = fused
         self.pool = UnitPool(hw.n_units)
         self.ticks = 0
         self.conflicts = 0               # admission rejections (engine full)
@@ -169,11 +182,14 @@ class ClusterRuntime:
         self._demand_cache: dict[tuple[str, int], tuple] = {}
 
     # ------------------------------------------------------------------
-    def warmup(self, prompt_lens: tuple[int, ...] = ()) -> dict:
-        """AOT-compile every engine's full level table (level switches
-        during serve() become dictionary swaps).  Returns per-tenant
-        version-cache stats."""
-        return {t.name: t.engine.warmup(prompt_lens=prompt_lens)
+    def warmup(self, prompt_lens: tuple[int, ...] = (),
+               quantum_buckets: tuple[int, ...] | None = None) -> dict:
+        """AOT-compile every engine's full level table AND its fused
+        K-bucket quantum executables (level switches during serve()
+        become dictionary swaps; the first fused dispatch never traces).
+        Returns per-tenant version-cache stats."""
+        return {t.name: t.engine.warmup(prompt_lens=prompt_lens,
+                                        quantum_buckets=quantum_buckets)
                 for t in self.tenants}
 
     def _footprint(self, tenant: EngineTenant, units: int) -> tuple:
@@ -328,8 +344,19 @@ class ClusterRuntime:
             self.partition_trace.append(
                 {t.name: self._state[t.name].grant for t in self.tenants})
 
-            finished: list[tuple[str, Request]] = []
-            held: list[tuple[_TenantState, int, float]] = []
+            # dispatch phase: issue every granted engine's quantum BEFORE
+            # blocking on any of them — in fused mode begin_quantum returns
+            # without a host sync, so N co-located engines' device work
+            # overlaps instead of serializing through the Python loop
+            granted = [t for t in active if self._state[t.name].grant > 0]
+            # lockstep tick quantum: every granted engine dispatches the
+            # same number of steps this tick (the smallest outstanding
+            # quantum), so no co-runner loses virtual time waiting for a
+            # longer quantum to drain — engines with bigger blocks keep
+            # their grant and continue next tick
+            q_tick = min((self._state[t.name].quantum_left
+                          for t in granted), default=0)
+            launched: list[tuple] = []
             for t in active:
                 st = self._state[t.name]
                 if st.grant == 0:
@@ -337,29 +364,62 @@ class ClusterRuntime:
                     # pending); time still advances below, so the next tick
                     # re-plans instead of spinning
                     continue
-                held.append((st, st.grant,
-                             t.engine.active_slots / t.engine.slots))
-                for req in t.engine.step():
-                    finished.append((t.name, req))
-                st.quantum_left -= 1
+                occupancy = t.engine.active_slots / t.engine.slots
+                handle = (t.engine.begin_quantum(q_tick)
+                          if self.fused else None)
+                launched.append((t, st, handle, occupancy))
+
+            # collect phase: one host sync per engine per quantum
+            finished: list[tuple[str, Request, int]] = []
+            held: list[tuple] = []
+            max_run = 1
+            for t, st, handle, occupancy in launched:
+                if self.fused:
+                    fin = t.engine.finish_quantum(handle)
+                    steps = handle.steps if handle is not None else 1
+                    row_steps = (handle.row_steps if handle is not None
+                                 else {})
+                    row_tokens = (float(handle.n_left.sum())
+                                  if handle is not None else 0.0)
+                else:
+                    fin = t.engine.step()
+                    steps = 1
+                    row_steps = {}
+                    row_tokens = occupancy * t.engine.slots
+                max_run = max(max_run, steps)
+                held.append((st, st.grant, occupancy, steps, row_tokens,
+                             t.engine.slots))
+                for req in fin:
+                    finished.append((t.name, req, row_steps.get(req.rid,
+                                                                steps)))
+                st.quantum_left -= steps
                 if st.quantum_left <= 0 or not t.engine.active_slots:
                     self._release(st)
 
             dt = (time.perf_counter() - t_tick) if self.wall_clock \
-                else self.step_dt
+                else self.step_dt * max_run
             self.ticks += 1
+            t_begin = now
             now += dt
-            # unit-time accounting uses the same dt as the clock, so
+            # unit-time accounting uses the same dt basis as the clock, so
             # summarize()'s avg_units/efficiency stay consistent in both
-            # virtual and wall_clock modes
-            for st, grant, occupancy in held:
-                st.busy += grant * dt * occupancy
-                st.alloc += grant * dt
-            for name, req in finished:
+            # virtual and wall_clock modes.  In virtual mode an engine is
+            # charged for the steps it actually executed; busy counts the
+            # rows that actually decoded (grant * step_dt * row-steps /
+            # slots reduces to the old grant * dt * occupancy at steps=1)
+            for st, grant, occupancy, steps, row_tokens, slots in held:
+                if self.wall_clock:
+                    st.busy += grant * dt * occupancy
+                    st.alloc += grant * dt
+                else:
+                    st.busy += grant * self.step_dt * row_tokens / slots
+                    st.alloc += grant * self.step_dt * steps
+            for name, req, off in finished:
                 _, at, _ = meta[req.rid]
                 st = self._state[name]
+                fin = now if self.wall_clock else t_begin + off * self.step_dt
                 st.records.append(QueryRecord(
-                    tenant=name, arrival=at, finish=now,
+                    tenant=name, arrival=at, finish=fin,
                     qos_s=by_name[name].plan.qos_s))
 
         for t in self.tenants:               # return whatever is still held
@@ -390,4 +450,8 @@ class ClusterRuntime:
             quanta={t.name: self._state[t.name].quanta
                     for t in self.tenants},
             pool_conflicts=self.pool.conflicts,
-            pool_peak_used=self.pool.peak_used)
+            pool_peak_used=self.pool.peak_used,
+            host_syncs={t.name: t.engine.host_syncs
+                        for t in self.tenants},
+            tokens_per_sync={t.name: t.engine.tokens_per_sync
+                             for t in self.tenants})

@@ -26,6 +26,7 @@ scheduling policy for it every step.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax
@@ -35,8 +36,14 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import cost_model as cm
 from repro.kernels import dispatch
-from repro.models.model import Model, build_model
+from repro.models.model import Model, build_model, cache_batch_axis
 from repro.serving.version_cache import VersionCache
+
+# Fused-quantum executable sizes: a quantum of k decode steps runs as the
+# smallest warmed bucket >= k (rows past their budget freeze on device, so
+# an oversized bucket stays token-exact and only wastes the frozen tail).
+# Quanta larger than the top bucket split into multiple fused calls.
+QUANTUM_BUCKETS = (1, 2, 4, 8, 16)
 
 # Built-in interference-level -> tile table (one entry per grid level).
 # Low pressure: big tiles, maximal reuse of the shared cache; high
@@ -58,10 +65,28 @@ class Request:
     done: bool = False
 
 
+@dataclasses.dataclass
+class QuantumHandle:
+    """An in-flight fused dispatch quantum.
+
+    ``begin_quantum`` returns one of these *without* syncing: ``block``
+    is still an on-device (possibly not-yet-computed) array, so a caller
+    co-locating several engines can issue every engine's quantum before
+    blocking on any of them — the device work overlaps instead of
+    serializing through Python.  ``finish_quantum`` performs the single
+    device->host sync and the request bookkeeping."""
+    block: jax.Array               # (K, B) int32 on-device token block
+    n_left: np.ndarray             # (B,) per-row steps actually budgeted
+    steps: int                     # quantum length (max over rows)
+    active: list[int]              # slots live at dispatch time
+    row_steps: dict = dataclasses.field(default_factory=dict)  # rid -> steps
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
-                 version_sets: list | None = None):
+                 version_sets: list | None = None,
+                 quantum_buckets: tuple[int, ...] = QUANTUM_BUCKETS):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.params = params
@@ -83,14 +108,33 @@ class ServingEngine:
         self.interference_level = 0.0
         self._active_tiles: dict | None = None
         self.level_switches = 0           # distinct-version switch count
+        self.quantum_buckets = tuple(sorted(set(
+            int(b) for b in quantum_buckets)))
+        if not self.quantum_buckets or self.quantum_buckets[0] < 1:
+            raise ValueError("quantum_buckets must be positive ints")
+        # dispatch-granularity counters: the fused-quantum win is measured,
+        # not asserted — tokens_per_sync is the tokens decoded per
+        # device->host sync (1.0 on the per-step path, up to K fused)
+        self.host_syncs = 0
+        self.tokens_decoded = 0
+        self.quantum_calls = 0
         self.version_cache = VersionCache(self.model)
+        # per-engine row writer: O(row) in-place admission (donated cache +
+        # dynamic_update_slice along the batch axis; slot is a traced
+        # scalar, so one executable serves every slot)
+        self._row_writer = self._make_row_writer()
         self._use_version({})             # baseline: no overrides installed
 
     # ------------------------------------------------------------------
     def _use_version(self, tiles: dict) -> None:
         entry = self.version_cache.get(tiles)
+        self._entry = entry
         self._prefill_one = entry.prefill
         self._decode = entry.decode
+
+    @property
+    def tokens_per_sync(self) -> float:
+        return self.tokens_decoded / max(self.host_syncs, 1)
 
     def tiles_for_level(self, level: float) -> dict:
         """The tile table the compiled source selects at ``level``."""
@@ -125,7 +169,8 @@ class ServingEngine:
         return {op: dict(kw) for op, kw in tiles.items()}
 
     def warmup(self, prompt_lens: tuple[int, ...] = (),
-               levels: list[float] | None = None) -> dict:
+               levels: list[float] | None = None,
+               quantum_buckets: tuple[int, ...] | None = None) -> dict:
         """Ahead-of-time build AND execute the executables of every
         interference level (default: the full NUM_LEVELS grid), so later
         ``set_interference_level`` calls are dictionary swaps and the step
@@ -133,11 +178,23 @@ class ServingEngine:
 
         Decode is shape-stable and always warmed; prefill specializes per
         prompt length, so pass the lengths the workload will use in
-        ``prompt_lens``.  Memory: one compiled decode per distinct tile
-        configuration plus one compiled prefill per (configuration,
-        length).  Returns the version-cache stats snapshot."""
+        ``prompt_lens``.  Every fused K-bucket executable is AOT-compiled
+        alongside (against abstract cache shapes — no decode steps run for
+        them), so the first ``step_quantum`` after warmup never traces
+        either; pass ``quantum_buckets`` to warm a subset.  Memory: one
+        compiled decode + one fused executable per (distinct tile
+        configuration, K-bucket), plus one compiled prefill per
+        (configuration, length).  Returns the version-cache stats
+        snapshot."""
         if levels is None:
             levels = [cm.grid_point(i) for i in range(cm.NUM_LEVELS)]
+        buckets = (self.quantum_buckets if quantum_buckets is None
+                   else tuple(quantum_buckets))
+        # the warm decode calls below donate self.cache and run at pos=0,
+        # so snapshot any resident request rows and restore them after —
+        # warming up mid-serving must not corrupt in-flight KV/SSM state
+        live_rows = [(i, self._slice_row(i))
+                     for i, r in enumerate(self.slot_req) if r is not None]
         toks = jnp.zeros((self.slots,), jnp.int32)
         pos = jnp.zeros((self.slots,), jnp.int32)
         # the currently-active version first (the no-override baseline an
@@ -147,14 +204,22 @@ class ServingEngine:
         tile_tables += [self.tiles_for_level(lv) for lv in levels]
         for tiles in tile_tables:
             entry = self.version_cache.get(tiles)
-            logits, _ = entry.decode(self.params, {"tokens": toks},
-                                     self.cache, pos)
+            # decode donates its cache: adopt the returned one (numerics
+            # are irrelevant here — live rows are always re-prefilled from
+            # the pristine row at admission)
+            logits, self.cache = entry.decode(self.params, {"tokens": toks},
+                                              self.cache, pos)
             logits.block_until_ready()
+            for k in buckets:
+                self.version_cache.quantum(entry, k, self.params,
+                                           self.cache, self.slots)
             for plen in prompt_lens:
                 lg, _ = entry.prefill(
                     self.params, jnp.zeros((1, int(plen)), jnp.int32),
                     self._empty_row)
                 lg.block_until_ready()
+        for i, row in live_rows:
+            self.cache = self._row_writer(self.cache, row, jnp.int32(i))
         return dict(self.version_cache.stats)
 
     @property
@@ -171,42 +236,44 @@ class ServingEngine:
                 return i
         return None
 
-    @staticmethod
-    def _batch_axis(path) -> int:
-        """Scanned block caches carry a leading layer axis: batch is axis 1
-        under the 'blocks' subtree, axis 0 elsewhere."""
-        return 1 if any(getattr(p, "key", None) == "blocks"
-                        for p in path) else 0
-
     def _slice_row(self, slot: int):
         return jax.tree_util.tree_map_with_path(
             lambda p, c: jax.lax.slice_in_dim(c, slot, slot + 1,
-                                              axis=self._batch_axis(p)),
+                                              axis=cache_batch_axis(p)),
             self.cache)
 
-    def _write_row(self, row_cache, slot: int):
-        def put(p, c, r):
-            ax = self._batch_axis(p)
-            idx = [slice(None)] * c.ndim
-            idx[ax] = slice(slot, slot + 1)
-            return c.at[tuple(idx)].set(r.astype(c.dtype))
-        return jax.tree_util.tree_map_with_path(put, self.cache, row_cache)
+    @staticmethod
+    def _make_row_writer():
+        """Jitted O(row) slot write: the batched cache is donated (updated
+        in place) and the row lands via ``dynamic_update_slice_in_dim`` on
+        its batch axis — admission cost scales with one row, not with the
+        whole (slots, max_len) cache.  ``slot`` is a traced scalar, so a
+        single executable serves every slot."""
+        def write(cache, row_cache, slot):
+            def put(p, c, r):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, r.astype(c.dtype), slot, axis=cache_batch_axis(p))
+            return jax.tree_util.tree_map_with_path(put, cache, row_cache)
+        return jax.jit(write, donate_argnums=(0,))
 
     def add_request(self, req: Request) -> bool:
         """Admit a request: prefill its prompt into its slot's cache rows.
 
         Single-row prefill runs on a batch-1 view of a pristine row, then
-        writes the slot row (slot caches are independent along the batch
-        axis).  Prompts of any length join at any step — decode is
-        per-slot, so no alignment with resident slots is required."""
+        writes the slot row in place (slot caches are independent along
+        the batch axis).  Prompts of any length join at any step — decode
+        is per-slot, so no alignment with resident slots is required."""
         slot = self._free_slot()
         if slot is None:
             return False
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         logits, row_cache = self._prefill_one(self.params, toks,
                                               self._empty_row)
-        self.cache = self._write_row(row_cache, slot)
-        first = int(jnp.argmax(logits[0]))
+        self.cache = self._row_writer(self.cache, row_cache,
+                                      jnp.int32(slot))
+        first = int(jnp.argmax(logits[0]))      # prompt's first sampled token
+        self.host_syncs += 1
+        self.tokens_decoded += 1
         req.output.append(first)
         self.slot_req[slot] = req
         self.slot_pos[slot] = len(req.prompt)
@@ -228,6 +295,8 @@ class ServingEngine:
             self.params, {"tokens": jnp.asarray(toks)}, self.cache,
             jnp.asarray(self.slot_pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.host_syncs += 1
+        self.tokens_decoded += len(active)
         finished = []
         for i in active:
             req = self.slot_req[i]
@@ -240,15 +309,88 @@ class ServingEngine:
                 self.slot_req[i] = None
         return finished
 
+    # ------------------------------------------------------------------
+    # Fused dispatch quanta
+    # ------------------------------------------------------------------
+    def begin_quantum(self, k: int) -> QuantumHandle | None:
+        """Dispatch up to ``k`` decode steps for every active slot as ONE
+        fused on-device executable, without syncing.
+
+        Per-row budgets (``n_left``) clamp each slot to its remaining
+        token/length allowance and to ``k``; rows past their budget freeze
+        on device (token, position and cache), so the result is
+        token-for-token identical to ``k`` sequential :meth:`step` calls.
+        The executed quantum is capped at the largest K-bucket — callers
+        dispatching bigger quanta issue further calls with the leftover
+        (one sync each).  Returns ``None`` when no slot is active."""
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active or k <= 0:
+            return None
+        n_left = np.zeros(self.slots, np.int32)
+        toks = np.zeros(self.slots, np.int32)
+        for i in active:
+            req = self.slot_req[i]
+            need = req.max_new_tokens + 1 - len(req.output)
+            room = self.max_len - 1 - int(self.slot_pos[i])
+            # a live row always decodes at least one step — exactly what
+            # sequential step() does before its finish check, and it keeps
+            # degenerate admissions (max_new_tokens=0, prompt at the length
+            # limit) finishing instead of spinning with a zero budget
+            n_left[i] = max(1, min(need, room))
+            toks[i] = req.output[-1]
+        steps = int(min(int(k), int(n_left.max()),
+                        self.quantum_buckets[-1]))
+        bucket = next(b for b in self.quantum_buckets if b >= steps)
+        n_left = np.minimum(n_left, steps)
+        qfn = self.version_cache.quantum(self._entry, bucket, self.params,
+                                         self.cache, self.slots)
+        block, self.cache, _ = qfn(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.slot_pos), jnp.asarray(n_left))
+        self.quantum_calls += 1
+        return QuantumHandle(block=block, n_left=n_left, steps=steps,
+                             active=active)
+
+    def finish_quantum(self, handle: QuantumHandle | None) -> list[Request]:
+        """Block on a dispatched quantum — the single device->host sync at
+        the quantum boundary — and do the request bookkeeping: append each
+        row's tokens, advance positions, free finished slots.  Returns
+        finished requests (like :meth:`step`); per-request executed steps
+        land in ``handle.row_steps``."""
+        if handle is None:
+            return []
+        block = np.asarray(handle.block)     # ONE sync for the whole block
+        self.host_syncs += 1
+        finished = []
+        for i in handle.active:
+            req = self.slot_req[i]
+            took = int(handle.n_left[i])
+            req.output.extend(int(t) for t in block[:took, i])
+            self.slot_pos[i] += took
+            self.tokens_decoded += took
+            handle.row_steps[req.rid] = took
+            if len(req.output) >= req.max_new_tokens + 1 or \
+                    self.slot_pos[i] >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                self.slot_req[i] = None
+        return finished
+
+    def step_quantum(self, k: int) -> list[Request]:
+        """Fused ``k``-step decode with exactly one host sync: dispatch +
+        collect in one call (use :meth:`begin_quantum` /
+        :meth:`finish_quantum` to overlap several engines)."""
+        return self.finish_quantum(self.begin_quantum(k))
+
     def run_to_completion(self, reqs: list[Request],
                           max_steps: int = 10_000) -> list[Request]:
-        pending = list(reqs)
+        pending = collections.deque(reqs)
         done: list[Request] = []
         steps = 0
         while (pending or any(r is not None for r in self.slot_req)) \
                 and steps < max_steps:
             while pending and self.add_request(pending[0]):
-                pending.pop(0)
+                pending.popleft()
             done.extend(self.step())
             steps += 1
         return done

@@ -37,7 +37,7 @@ from repro.core import cost_model as cm
 from repro.core.interference import RunningDemand, read_counters
 from repro.core.layer_block import ModelPlan
 from repro.core.qos import QueryRecord, ServingMetrics, summarize
-from repro.core.scheduler import Policy
+from repro.core.scheduler import Policy, TaskState
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.request import poisson_workload, synth_prompts
 from repro.serving.simulator import SimConfig, Simulator
@@ -115,13 +115,23 @@ class OnlineRuntime:
 
     Each iteration: admit due arrivals into free slots, derive the live
     interference level from the policy, apply it to the engine's kernel
-    dispatch, run one batched decode step, and record completions as
-    QueryRecords against each tenant's QoS deadline."""
+    dispatch, dispatch the next layer-block-sized quantum as ONE fused
+    on-device call (``fused=True``, the default) or a single batched
+    decode step (``fused=False``, the per-step baseline), and record
+    completions as QueryRecords against each tenant's QoS deadline.
+
+    In fused mode the policy's layer-block plan (``plan_chunk_at``)
+    sets the dispatch quantum: the scheduler only intervenes at block
+    boundaries, and the engine syncs the host exactly once per quantum
+    (``engine.host_syncs`` / ``engine.tokens_per_sync`` measure it).
+    Completions inside a quantum keep exact virtual finish times — the
+    engine reports per-request executed steps."""
 
     def __init__(self, engine: ServingEngine, policy: Policy,
                  plans: dict[str, ModelPlan], hw: cm.HardwareSpec, *,
                  step_dt: float = 1e-3, wall_clock: bool = False,
-                 max_steps: int = 200_000, seed: int = 0):
+                 max_steps: int = 200_000, seed: int = 0,
+                 fused: bool = True):
         self.engine = engine
         self.policy = policy
         self.plans = plans
@@ -129,12 +139,16 @@ class OnlineRuntime:
         self.step_dt = step_dt
         self.wall_clock = wall_clock
         self.max_steps = max_steps
+        self.fused = fused
         import numpy as np
         self._rng = np.random.default_rng(seed)   # counter-read noise
         self.records: list[QueryRecord] = []
         self.level_trace: list[float] = []
         self.conflicts = 0
         self.steps = 0
+        self.quanta = 0                  # fused dispatch quanta issued
+        self._cursor = 0                 # layer-block cursor (fused mode)
+        self._cursor_n = 1               # cursor modulus (head plan layers)
         # wall time spent inside set_interference_level — with a warmed
         # version cache this is pure dictionary swaps; without it, this is
         # where re-jit/compile stalls land (and they ARE charged to latency
@@ -146,6 +160,45 @@ class OnlineRuntime:
                         for name, plan in plans.items()}
 
     # ------------------------------------------------------------------
+    @property
+    def host_syncs(self) -> int:
+        return self.engine.host_syncs
+
+    @property
+    def tokens_per_sync(self) -> float:
+        return self.engine.tokens_per_sync
+
+    def _plan_quantum(self, meta: dict, sample, now: float) -> int:
+        """Dispatch-quantum length from the policy's layer-block plan:
+        the head-of-line tenant's next block at the proxied pressure
+        (Alg. 2/3) — block size == decode steps until the scheduler
+        intervenes again.  Static policies yield their natural quanta
+        (model-wise: a whole pass; fixed-block: K; layer-wise: 1)."""
+        head = None
+        for req in self.engine.slot_req:
+            if req is None:
+                continue
+            tenant, _, admit = meta[req.rid]
+            if head is None or admit < head[1]:
+                head = (tenant, admit)
+        if head is None:
+            return 1
+        plan = self.plans[head[0]]
+        task = TaskState(tid=0, tenant=head[0], plan=plan,
+                         arrival=head[1],
+                         next_layer=self._cursor % plan.n_layers)
+        itf = self.policy.interference_from_counters(sample)
+        chunk = self.policy.plan_chunk_at(task, [task], itf, now,
+                                          self.hw.n_units)
+        # the cursor advances by the steps the engine actually EXECUTES
+        # (see serve()), not by the planned chunk — a quantum truncated by
+        # row budgets or the K-bucket cap must not let block boundaries
+        # drift ahead of the work that ran
+        self._cursor_n = plan.n_layers
+        if chunk is None:
+            return 1
+        return max(chunk.end_layer - task.next_layer, 1)
+
     def _active_demands(self, meta: dict, now: float
                         ) -> list[RunningDemand]:
         out = []
@@ -216,17 +269,38 @@ class OnlineRuntime:
             self.compile_time_s += time.perf_counter() - t0
             self.level_trace.append(level)
 
-            finished = self.engine.step()
+            handle = None
+            if self.fused:
+                q = self._plan_quantum(meta, sample, now)
+                handle = self.engine.begin_quantum(q)
+                finished = self.engine.finish_quantum(handle)
+                steps_run = handle.steps if handle is not None else 1
+                if handle is not None:
+                    self._cursor = (self._cursor + handle.steps) \
+                        % self._cursor_n
+                self.quanta += 1
+            else:
+                finished = self.engine.step()
+                steps_run = 1
             dt = (time.perf_counter() - t0) if self.wall_clock \
-                else self.step_dt
-            self.steps += 1
+                else self.step_dt * steps_run
+            self.steps += steps_run
+            t_begin = now
             now += dt
-            busy += n_active * dt
+            if handle is not None and not self.wall_clock:
+                # exact virtual accounting: each row was busy for the
+                # steps it actually decoded, not the full quantum
+                busy += float(handle.n_left.sum()) * self.step_dt
+            else:
+                busy += n_active * dt
             alloc += self.engine.slots * dt
             for req in finished:
                 tenant, arrival, _ = meta[req.rid]
+                fin = now
+                if handle is not None and not self.wall_clock:
+                    fin = t_begin + handle.row_steps[req.rid] * self.step_dt
                 self.records.append(QueryRecord(
-                    tenant=tenant, arrival=arrival, finish=now,
+                    tenant=tenant, arrival=arrival, finish=fin,
                     qos_s=self.plans[tenant].qos_s))
 
         return summarize(self.records, wl.qps,

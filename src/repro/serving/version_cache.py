@@ -18,7 +18,16 @@ Keys are derived from the same tile dictionaries the engine's level
 tables produce (``VersionSet`` selections or ``DEFAULT_LEVEL_TILES``), so
 the cache holds at most one entry per distinct code version (<= NUM_LEVELS
 per engine).  Memory footprint: one traced+compiled prefill per prompt
-length warmed plus one decode executable per entry.
+length warmed plus one decode executable per entry, plus one fused
+quantum-decode executable per (entry, K-bucket) actually used.
+
+Donation: the decode and quantum executables donate their cache argument
+(``donate_argnums``), so every step updates the KV/SSM buffers in place
+instead of allocating a fresh cache — the caller must treat the cache it
+passed in as consumed and adopt the returned one.  The prefill callable
+deliberately does NOT donate: the engine reuses one pristine cache row
+for every admission, and donating it would invalidate that row after the
+first prefill.
 
 ``traces`` counts *actual* jax traces (the counter increments inside the
 traced body, so it fires on first-call tracing and any shape-driven
@@ -31,6 +40,7 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import dispatch
 
@@ -48,6 +58,9 @@ class VersionEntry:
     tiles: dict[str, dict]
     prefill: Callable          # (params, tokens (1,L), row_cache) -> ...
     decode: Callable           # (params, {"tokens": (B,)}, cache, t) -> ...
+    # K-bucket -> AOT-compiled fused quantum decode
+    #   (params, tokens (B,), cache, pos (B,), n_left (B,)) -> (block, cache, pos)
+    quanta: dict[int, Callable] = dataclasses.field(default_factory=dict)
 
 
 class VersionCache:
@@ -104,5 +117,43 @@ class VersionCache:
             with dispatch.tile_context(snap):
                 return model.decode_step(params, inputs, cache, t)
 
-        return VersionEntry(key=key, tiles=snap,
-                            prefill=jax.jit(prefill), decode=jax.jit(decode))
+        # decode donates its cache (in-place KV/SSM update; the engine
+        # adopts the returned cache every step); prefill must NOT — its
+        # cache argument is the shared pristine row (see module docstring)
+        return VersionEntry(key=key, tiles=snap, prefill=jax.jit(prefill),
+                            decode=jax.jit(decode, donate_argnums=(2,)))
+
+    # ------------------------------------------------------------------
+    def quantum(self, entry: VersionEntry, k: int, params: Any,
+                cache: Any, batch: int) -> Callable:
+        """The fused K-step decode executable for ``entry`` (built on
+        first use, then cached on the entry).
+
+        ``k`` is the static K-bucket; ``cache`` supplies the shapes to
+        compile against (it is only read for shape/dtype here).  The
+        executable is AOT-lowered and compiled against abstract shapes —
+        warmup can pre-build every bucket without executing a single
+        decode step — and donates the cache argument, so each of the K
+        on-device steps updates the KV/SSM state in place."""
+        k = int(k)
+        fn = entry.quanta.get(k)
+        if fn is not None:
+            self.hits += 1
+            return fn
+        self.misses += 1
+        snap = entry.tiles
+        model = self.model
+
+        def qfn(params, tokens, cache, pos, n_left):
+            self.traces += 1
+            with dispatch.tile_context(snap):
+                return model.decode_quantum(params, tokens, cache, pos,
+                                            n_left, k)
+
+        vec = jax.ShapeDtypeStruct((int(batch),), jnp.int32)
+        cache_sds = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+        fn = (jax.jit(qfn, donate_argnums=(2,))
+              .lower(params, vec, cache_sds, vec, vec).compile())
+        entry.quanta[k] = fn
+        return fn

@@ -1,0 +1,241 @@
+"""Fused dispatch quanta: ``step_quantum(k)`` must be token-for-token
+identical to ``k`` sequential ``step()`` calls — under staggered
+admissions, mixed prompt lengths, mid-quantum completions (per-request
+``max_new_tokens`` so rows freeze at different steps inside one quantum)
+and level switches at quantum boundaries — in both the XLA reference
+path and Pallas interpret mode.  The quantum boundary is also the host
+boundary: exactly ONE device->host sync per fused call, and a full level
+sweep after ``warmup()`` leaves the version-cache trace counter flat
+with the fused quantum entries already present."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core import cost_model as cm
+from repro.kernels import dispatch
+from repro.serving.engine import Request, ServingEngine
+
+MAX_LEN = 32
+
+
+def _sequential_reference(model, params, prompt, n_new):
+    """One request alone through the raw model — the ground truth."""
+    cache = model.init_cache(1, MAX_LEN)
+    logits, cache = model.prefill(
+        params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]}, cache)
+    out = [int(jnp.argmax(logits[0]))]
+    t = len(prompt)
+    for _ in range(n_new):
+        logits, cache = model.decode_step(
+            params, {"tokens": jnp.asarray([out[-1]], jnp.int32)}, cache,
+            jnp.int32(t))
+        out.append(int(jnp.argmax(logits[0])))
+        t += 1
+    return out
+PROMPT_LENS = (3, 7, 2)          # deliberately misaligned
+MAX_NEW = (6, 3, 5)              # rows complete at different quantum steps
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.models import build_model
+    cfg = get_reduced_config("gemma-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in PROMPT_LENS]
+    return cfg, model, params, prompts
+
+
+@pytest.fixture(autouse=True)
+def _clean_dispatch():
+    yield
+    dispatch.set_mode("xla")
+    dispatch.clear_tile_overrides()
+
+
+def _make_reqs(prompts):
+    return [Request(rid=i, prompt=p, max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(prompts, MAX_NEW))]
+
+
+# The shared schedule: admissions and level switches happen only at
+# quantum boundaries, so the fused and per-step runs see byte-identical
+# request state at every boundary.  (quantum, level, admit_next) tuples.
+SCHEDULE = [(2, 0.0, True), (3, 1.0, True), (4, 0.3, False),
+            (2, 1.0, True), (4, 0.0, False), (8, 0.6, False),
+            (8, 0.6, False), (8, 0.0, False)]
+
+
+def _run_schedule(cfg, params, prompts, *, fused):
+    engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN,
+                           quantum_buckets=(2, 4))
+    reqs = _make_reqs(prompts)
+    pending = list(reqs)
+    for k, level, admit in SCHEDULE:
+        if admit and pending:
+            if engine.add_request(pending[0]):
+                pending.pop(0)
+        engine.set_interference_level(level)
+        if fused:
+            engine.step_quantum(k)
+        else:
+            for _ in range(k):
+                engine.step()
+        if not pending and all(r.done for r in reqs):
+            break
+    assert all(r.done for r in reqs), "schedule must drain every request"
+    return engine, reqs
+
+
+@pytest.mark.parametrize("mode", ["xla", "interpret"])
+def test_quantum_identical_to_sequential_steps(setup, mode):
+    cfg, _, params, prompts = setup
+    dispatch.set_mode(mode)
+    _, want = _run_schedule(cfg, params, prompts, fused=False)
+    eng, got = _run_schedule(cfg, params, prompts, fused=True)
+    for w, g in zip(want, got):
+        assert g.output == w.output, (mode, g.rid, g.output, w.output)
+    # the fused run really coarsened the dispatch unit
+    assert eng.quantum_calls >= 3
+    assert eng.tokens_per_sync > 1.0
+
+
+def test_exactly_one_host_sync_per_quantum(setup):
+    """Acceptance: the host blocks once per fused quantum — the sync
+    counter advances by exactly 1 per step_quantum regardless of how many
+    tokens the quantum decoded."""
+    cfg, _, params, prompts = setup
+    engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN)
+    reqs = _make_reqs(prompts)
+    engine.add_request(reqs[0])
+    engine.add_request(reqs[1])
+    while any(r is not None for r in engine.slot_req):
+        syncs0, toks0 = engine.host_syncs, engine.tokens_decoded
+        engine.step_quantum(4)
+        assert engine.host_syncs == syncs0 + 1
+        assert engine.tokens_decoded > toks0
+    # per-step baseline: one sync per token
+    engine2 = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN)
+    engine2.add_request(_make_reqs(prompts)[0])
+    s0 = engine2.host_syncs
+    engine2.step()
+    engine2.step()
+    assert engine2.host_syncs == s0 + 2
+
+
+def test_quanta_beyond_max_bucket_split_and_stay_exact(setup):
+    """A quantum larger than the top K-bucket is executed in bucket-sized
+    fused chunks (one sync each) and stays token-identical."""
+    cfg, model, params, prompts = setup
+    want = _sequential_reference(model, params, prompts[0], 9)
+    engine = ServingEngine(cfg, params, batch_slots=1, max_len=MAX_LEN,
+                           quantum_buckets=(1, 2))
+    req = Request(rid=0, prompt=prompts[0], max_new_tokens=9)
+    engine.add_request(req)
+    calls = 0
+    while not req.done:
+        h = engine.begin_quantum(16)
+        assert h.steps <= 2, "capped at the largest warmed bucket"
+        engine.finish_quantum(h)
+        calls += 1
+    assert calls >= 5                      # 9 tokens in <=2-step chunks
+    assert req.output[:10] == want[:10]
+
+
+def test_mid_quantum_completion_frees_slot_for_next_admission(setup):
+    """A row finishing mid-quantum frees its slot at the boundary, and
+    the next admission into that slot is pristine (no leaked state from
+    the frozen tail of the previous tenant)."""
+    cfg, model, params, prompts = setup
+    engine = ServingEngine(cfg, params, batch_slots=1, max_len=MAX_LEN)
+    short = Request(rid=0, prompt=prompts[0], max_new_tokens=2)
+    engine.add_request(short)
+    engine.step_quantum(8)                 # freezes after 2 steps
+    assert short.done
+    assert engine._free_slot() == 0
+    want = _sequential_reference(model, params, prompts[2], 4)
+    nxt = Request(rid=1, prompt=prompts[2], max_new_tokens=4)
+    engine.add_request(nxt)
+    while not nxt.done:
+        engine.step_quantum(4)
+    assert nxt.output[:5] == want[:5]
+
+
+def test_level_sweep_after_warmup_traces_flat_with_quanta(setup):
+    """Acceptance: warmup pre-builds the fused K-buckets alongside the
+    level table, so a full level sweep dispatching fused quanta performs
+    zero traces and zero version-cache misses."""
+    cfg, _, params, prompts = setup
+    engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN,
+                           quantum_buckets=(2, 4))
+    engine.warmup(prompt_lens=(len(prompts[0]),))
+    vc = engine.version_cache
+    for entry in vc._entries.values():
+        assert set(entry.quanta) == {2, 4}, "buckets prebuilt at warmup"
+    traces0, misses0 = vc.traces, vc.misses
+    engine.add_request(Request(rid=0, prompt=prompts[0],
+                               max_new_tokens=64))
+    for i in range(cm.NUM_LEVELS):
+        engine.set_interference_level(cm.grid_point(i))
+        engine.step_quantum(3)
+    assert vc.traces == traces0, "no trace after warmup"
+    assert vc.misses == misses0, "every fused dispatch is a cache hit"
+    assert engine.quantum_calls == cm.NUM_LEVELS
+
+
+def test_zero_budget_request_finishes_under_fused_dispatch(setup):
+    """Degenerate admissions (max_new_tokens=0) must complete in fused
+    mode exactly like the per-step loop (one decode then the finish
+    check), not spin forever with a zero quantum budget."""
+    cfg, _, params, prompts = setup
+
+    def run(fused):
+        engine = ServingEngine(cfg, params, batch_slots=1, max_len=MAX_LEN)
+        req = Request(rid=0, prompt=prompts[0], max_new_tokens=0)
+        engine.add_request(req)
+        for _ in range(4):
+            if req.done:
+                break
+            engine.step_quantum(4) if fused else engine.step()
+        return req
+
+    want, got = run(False), run(True)
+    assert want.done and got.done, "zero-budget request must finish"
+    assert got.output == want.output
+
+
+def test_warmup_mid_serving_preserves_inflight_state(setup):
+    """warmup() donates and rewrites the batched cache for its warm decode
+    calls — resident request rows must be snapshotted and restored, so a
+    mid-serving warmup never changes the tokens an in-flight request
+    produces."""
+    cfg, model, params, prompts = setup
+    want = _sequential_reference(model, params, prompts[0], 6)
+    engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN)
+    req = Request(rid=0, prompt=prompts[0], max_new_tokens=6)
+    engine.add_request(req)
+    engine.step()
+    engine.step()
+    engine.warmup(prompt_lens=(len(prompts[0]),))   # mid-serving warmup
+    while not req.done:
+        engine.step_quantum(4)
+    assert req.output[:7] == want[:7]
+
+
+def test_admission_write_is_jitted_and_row_local(setup):
+    """The O(row) admission path: repeated admissions reuse one compiled
+    row-writer executable (slot index is traced, so slot 0 and slot 1
+    share it) and never corrupt resident rows."""
+    cfg, model, params, prompts = setup
+    want = [_sequential_reference(model, params, p, 3) for p in prompts]
+    engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(prompts)]
+    done = engine.run_to_completion(list(reqs))
+    assert len(done) == len(reqs)
+    for i, r in enumerate(reqs):
+        assert r.output[:4] == want[i][:4]

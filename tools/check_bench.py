@@ -1,0 +1,72 @@
+"""Bench gate: the fused dispatch quantum must actually win.
+
+Reads BENCH_serving.json (written by ``python -m
+benchmarks.bench_online_serving [--tiny]`` at the repo root) and fails
+if the fused quantum path's warm decode throughput regressed below the
+per-step dispatch loop, or if fusion stopped coarsening the host
+boundary (tokens per device->host sync back at ~1).  Run from the repo
+root:
+
+    python -m benchmarks.bench_online_serving --tiny
+    python tools/check_bench.py
+
+Exit code 0 = fused dispatch holds its win; 1 = regression (each failed
+check is printed).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DEFAULT = ROOT / "BENCH_serving.json"
+
+
+def check(path: pathlib.Path) -> list[str]:
+    if not path.exists():
+        return [f"{path} missing — run "
+                "`python -m benchmarks.bench_online_serving --tiny` first"]
+    data = json.loads(path.read_text())
+    q = data.get("quantum")
+    if not q or "fused" not in q or "per_step" not in q:
+        return [f"{path} has no quantum section (stale file?)"]
+    fused, per_step = q["fused"], q["per_step"]
+    errors = []
+    if not fused["tokens_per_s"] > per_step["tokens_per_s"]:
+        errors.append(
+            f"fused warm decode regressed below per-step dispatch: "
+            f"{fused['tokens_per_s']} <= {per_step['tokens_per_s']} tok/s")
+    # deterministic (load-independent) check: fusion must coarsen the host
+    # boundary RELATIVE to the per-step baseline — batching/admissions
+    # already put the per-step arm above 1 token/sync, so comparing
+    # against a constant would miss fusion degenerating to 1-step quanta
+    if not fused["tokens_per_sync"] > 1.5 * per_step["tokens_per_sync"]:
+        errors.append(
+            f"fused path is not coarsening the host boundary: "
+            f"{fused['tokens_per_sync']} tokens/sync vs per-step's "
+            f"{per_step['tokens_per_sync']} (expected > 1.5x)")
+    if fused["tokens"] != per_step["tokens"]:
+        errors.append(
+            f"fused and per-step runs decoded different token counts "
+            f"({fused['tokens']} vs {per_step['tokens']}) — the comparison "
+            "is not apples-to-apples")
+    return errors
+
+
+def main() -> int:
+    path = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT
+    errors = check(path)
+    for e in errors:
+        print("BENCH REGRESSION:", e)
+    if errors:
+        return 1
+    data = json.loads(path.read_text())
+    print(f"bench gate: fused dispatch wins "
+          f"({data['quantum']['speedup_tokens_per_s']}x tokens/s, "
+          f"{data['quantum']['fused']['tokens_per_sync']} tokens/sync)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

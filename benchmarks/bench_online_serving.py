@@ -34,6 +34,13 @@ Sections:
                                    sync — the numbers also land in
                                    BENCH_serving.json at the repo root,
                                    which tools/check_bench.py gates in CI
+  * prefill/<mode>_tok_s           mixed-length (prompt_len_spread) warm
+                                   serve throughput: chunked+bucketed
+                                   prefill quanta vs monolithic
+                                   per-exact-length prefill; derived
+                                   column reports mean TTFT, post-warmup
+                                   jax traces (chunked must hold 0 — CI
+                                   gated) and bucket-padding overhead
 
 Run ``python -m benchmarks.bench_online_serving --tiny`` for the
 CI-sized run: the quantum section only, with a small workload, still
@@ -62,7 +69,7 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_serving.json"
 
 
-def _engine(plans):
+def _engine(plans, **kw):
     import jax
 
     from repro.configs import get_reduced_config
@@ -73,7 +80,7 @@ def _engine(plans):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return ServingEngine(cfg, params, batch_slots=2, max_len=32,
-                         version_sets=engine_version_sets(plans))
+                         version_sets=engine_version_sets(plans), **kw)
 
 
 def online_policies(plans):
@@ -236,9 +243,56 @@ def quantum_dispatch(plans, *, n_queries: int = N_QUERIES,
     return section
 
 
-def write_bench_json(quantum: dict, mode: str) -> None:
+def prefill_dispatch(plans, *, n_queries: int = N_QUERIES) -> dict:
+    """Mixed-length admission path: chunked+bucketed prefill quanta vs
+    monolithic per-exact-length prefill on the same spread workload.
+
+    Both arms warm up against the nominal prompt length (what a real
+    deployment would have seen); the length spread then admits prompts
+    the monolithic arm never compiled — every novel length is a
+    mid-serving retrace stall, while the chunked arm serves everything
+    from its power-of-two bucket table (``post_warmup_traces`` must stay
+    0 — tools/check_bench.py gates it).  TTFT contrast: chunked prefill
+    is metered as scheduled quanta, so ``avg_ttft_ms`` is real; the
+    monolithic arm admits inside the dispatch loop where prefill is
+    invisible to the clock — the understated-TTFT bug this section
+    exists to keep fixed."""
+    wl = Workload.poisson(TENANTS, 60, n_queries, prompt_len=14,
+                          max_new_tokens=4, seed=3, prompt_len_spread=11)
+    section: dict = {}
+    for name, chunked in (("monolithic", False), ("chunked", True)):
+        engine = _engine(plans, chunked_prefill=chunked,
+                         prefill_chunk_len=8)
+        engine.warmup(prompt_lens=(wl.prompt_len,))
+        traces0 = engine.version_cache.traces
+        runtime = OnlineRuntime(engine, VeltairPolicy(HW), plans, HW,
+                                wall_clock=True)
+        t0 = time.time()
+        m = runtime.serve(wl)
+        wall = time.time() - t0
+        toks = engine.tokens_decoded
+        section[name] = {
+            "tokens": int(toks),
+            "wall_s": round(wall, 4),
+            "tokens_per_s": round(toks / max(wall, 1e-9), 1),
+            "avg_ttft_ms": round(1e3 * m.avg_ttft_s, 3),
+            "post_warmup_traces": int(engine.version_cache.traces
+                                      - traces0),
+            "prefill_tokens": int(engine.prefill_tokens),
+            "pad_tokens": int(engine.prefill_pad_tokens),
+            "qos_rate": round(m.qos_rate, 3),
+        }
+        emit(f"prefill/{name}_tok_s", section[name]["tokens_per_s"],
+             f"ttft_ms={section[name]['avg_ttft_ms']};"
+             f"traces={section[name]['post_warmup_traces']};"
+             f"pad_tokens={section[name]['pad_tokens']}")
+    return section
+
+
+def write_bench_json(quantum: dict, prefill: dict, mode: str) -> None:
     BENCH_JSON.write_text(json.dumps(
-        {"bench": "online_serving", "mode": mode, "quantum": quantum},
+        {"bench": "online_serving", "mode": mode, "quantum": quantum,
+         "prefill": prefill},
         indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}", flush=True)
 
@@ -248,16 +302,18 @@ def run_all():
     online_policies(plans)
     level_switch_cost(plans)
     colocation_policies()
-    write_bench_json(quantum_dispatch(plans), "full")
+    write_bench_json(quantum_dispatch(plans), prefill_dispatch(plans),
+                     "full")
 
 
 def run_tiny():
-    """CI-sized run: the quantum fused-vs-per-step comparison only.
-    More repeats than the full run — the CI gate compares these numbers
-    on noisy shared runners, so best-of needs extra samples."""
+    """CI-sized run: the quantum fused-vs-per-step comparison plus the
+    mixed-length prefill section (both CI-gated).  More repeats than the
+    full run — the CI gate compares these numbers on noisy shared
+    runners, so best-of needs extra samples."""
     plans = build_paper_plans(TENANTS, HW)
     write_bench_json(quantum_dispatch(plans, n_queries=16, repeats=5),
-                     "tiny")
+                     prefill_dispatch(plans, n_queries=12), "tiny")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,8 @@ class QueryRecord:
     finish: float
     qos_s: float
     units_time: float = 0.0          # integral of units x time (efficiency)
+    ttft_s: float | None = None      # time to first token (metered prefill;
+                                     # None where the path cannot observe it)
 
     @property
     def latency(self) -> float:
@@ -33,6 +35,8 @@ class ServingMetrics:
     avg_units: float                # mean units used by running queries
     unit_efficiency: float          # useful busy-time / allocated unit-time
     n_queries: int = 0              # completed queries behind these numbers
+    avg_ttft_s: float = 0.0         # mean time-to-first-token over records
+                                    # that observed one (0.0 otherwise)
 
 
 def summarize(records: list[QueryRecord], qps_offered: float,
@@ -47,6 +51,7 @@ def summarize(records: list[QueryRecord], qps_offered: float,
                - min(r.arrival for r in records), 1e-9)
     avg_units = alloc_unit_time / span
     eff = busy_unit_time / alloc_unit_time if alloc_unit_time > 0 else 0.0
+    ttfts = [r.ttft_s for r in records if r.ttft_s is not None]
     return ServingMetrics(
         qps_offered=qps_offered,
         qos_rate=float(sat),
@@ -56,6 +61,7 @@ def summarize(records: list[QueryRecord], qps_offered: float,
         avg_units=float(avg_units),
         unit_efficiency=float(eff),
         n_queries=len(records),
+        avg_ttft_s=float(np.mean(ttfts)) if ttfts else 0.0,
     )
 
 

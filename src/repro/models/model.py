@@ -139,20 +139,26 @@ def _block_cache_specs(cfg: ModelConfig, kind: str, batch: int,
 # --------------------------------------------------------------------------
 def _apply_block(cfg: ModelConfig, kind: str, params: dict, x: jax.Array, *,
                  positions: jax.Array, cache: dict | None,
-                 t: jax.Array | int,
+                 t: jax.Array | int, valid_len: jax.Array | None = None,
                  ) -> tuple[jax.Array, dict | None, jax.Array]:
-    """-> (x, new_cache, aux_loss)."""
+    """-> (x, new_cache, aux_loss).
+
+    ``valid_len`` (chunked-prefill padding): tokens past it must be exact
+    no-ops for carried state.  Recurrent mixers and the window ring cache
+    mask explicitly; linear KV caches need nothing — a padded row is
+    causally invisible until decode reaches its position, and the decode
+    write at that position overwrites it first."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
         h, new_cache = ssm_mod.mamba2_block(
             params["mixer"], L.apply_norm(params["ln1"], x, cfg.norm_type),
-            cfg=cfg, cache=cache)
+            cfg=cfg, cache=cache, valid_len=valid_len)
         return x + h, new_cache, aux
 
     if kind == "rec":
         h, new_cache = rg_mod.rglru_block(
             params["mixer"], L.apply_norm(params["ln1"], x, cfg.norm_type),
-            cfg=cfg, cache=cache)
+            cfg=cfg, cache=cache, valid_len=valid_len)
         x = x + h
         m = L.apply_mlp(params["mlp"],
                         L.apply_norm(params["ln2"], x, cfg.norm_type),
@@ -167,7 +173,8 @@ def _apply_block(cfg: ModelConfig, kind: str, params: dict, x: jax.Array, *,
             cache_index=t if cache is not None else None)
     elif kind == "attn_local":
         h, new_cache = _local_attention(cfg, params["attn"], xa,
-                                        positions=positions, cache=cache, t=t)
+                                        positions=positions, cache=cache,
+                                        t=t, valid_len=valid_len)
     else:
         h, new_cache = L.attention(
             params["attn"], xa, cfg=cfg, positions=positions, cache=cache,
@@ -192,7 +199,8 @@ def _apply_block(cfg: ModelConfig, kind: str, params: dict, x: jax.Array, *,
 
 def _local_attention(cfg: ModelConfig, params: dict, x: jax.Array, *,
                      positions: jax.Array, cache: dict | None,
-                     t: jax.Array | int) -> tuple[jax.Array, dict | None]:
+                     t: jax.Array | int, valid_len: jax.Array | None = None,
+                     ) -> tuple[jax.Array, dict | None]:
     """RecurrentGemma local-attention layer (window ring-buffer cache)."""
     window = cfg.rglru.window_size
     b, s, _ = x.shape
@@ -204,6 +212,11 @@ def _local_attention(cfg: ModelConfig, params: dict, x: jax.Array, *,
     if cache is not None and s == 1:
         y, new_cache = rg_mod.window_attention_decode(q, cache, k, v, t,
                                                       window)
+    elif cache is not None and valid_len is not None:
+        # chunked prefill: attend across the ring cache (earlier chunks)
+        # and the in-chunk keys; only real tokens are written back
+        y, new_cache = rg_mod.window_attention_chunk(q, cache, k, v, t,
+                                                     valid_len, window)
     else:
         y = L.attend(q, k, v, q_positions=positions, kv_valid_len=s,
                      window=window)
@@ -322,7 +335,8 @@ class Model:
         return pos
 
     # -- stacks ------------------------------------------------------------
-    def _run_blocks(self, params, x, *, positions, caches, t, remat="none"):
+    def _run_blocks(self, params, x, *, positions, caches, t, remat="none",
+                    valid_len=None):
         cfg, plan = self.cfg, self.plan
         aux_total = jnp.zeros((), jnp.float32)
         new_caches: dict = {}
@@ -334,7 +348,8 @@ class Model:
                 key = kind if len(plan.scan_kinds) == 1 else f"{kind}_{j}"
                 c = gcache.get(key) if gcache is not None else None
                 x2, nc, a = _apply_block(cfg, kind, gp[key], x,
-                                         positions=positions, cache=c, t=t)
+                                         positions=positions, cache=c, t=t,
+                                         valid_len=valid_len)
                 x = x2
                 aux_g = aux_g + a
                 if nc is not None:
@@ -351,7 +366,8 @@ class Model:
         for i, kind in enumerate(plan.prologue):
             c = caches.get(f"pro_{i}") if caches is not None else None
             x, nc, a = _apply_block(cfg, kind, params[f"pro_{i}"], x,
-                                    positions=positions, cache=c, t=t)
+                                    positions=positions, cache=c, t=t,
+                                    valid_len=valid_len)
             aux_total += a
             if nc is not None:
                 new_caches[f"pro_{i}"] = nc
@@ -398,7 +414,8 @@ class Model:
         for i, kind in enumerate(plan.epilogue):
             c = caches.get(f"epi_{i}") if caches is not None else None
             x, nc, a = _apply_block(cfg, kind, params[f"epi_{i}"], x,
-                                    positions=positions, cache=c, t=t)
+                                    positions=positions, cache=c, t=t,
+                                    valid_len=valid_len)
             aux_total += a
             if nc is not None:
                 new_caches[f"epi_{i}"] = nc
@@ -452,6 +469,45 @@ class Model:
                                            caches=cache, t=0)
         x = L.apply_norm(params["final_norm"], x[:, -1:], cfg.norm_type)
         logits = L.unembed(params["embed"], x, cfg)
+        return logits[:, 0], new_cache
+
+    def prefill_chunk(self, params, inputs, cache, t0, valid_len, *,
+                      positions=None):
+        """Incremental prefill of one fixed-size chunk at absolute start
+        position ``t0`` (traced scalar) — the schedulable prefill quantum.
+
+        ``inputs["tokens"]`` is (B, C) with only the first ``valid_len``
+        tokens real; the tail is length-bucket padding and is an *exact*
+        no-op for all carried state: recurrent mixers (SSM / RG-LRU) mask
+        their updates to the last real token, the window ring cache
+        refuses pad writes, and a pad row in a linear KV cache is
+        causally invisible until the decode step at its position
+        overwrites it.  Chaining chunks (t0 = 0, C, 2C, ...) over a
+        prompt therefore yields a cache bit-identical to one monolithic
+        :meth:`prefill` — while the compiled shapes are the fixed bucket
+        set, not the prompt-length distribution.  (Exception: capacity
+        MoE routing drops tokens per routing *group*, whose size follows
+        the batch shape — so MoE families are chunk-schedule-dependent
+        whenever any token exceeds expert capacity, exactly as in any
+        chunked-prefill serving system.)
+
+        Returns (logits (B, V) at the last *valid* token, updated cache);
+        only the final chunk's logits are meaningful to sample from."""
+        cfg = self.cfg
+        b, s = (inputs["tokens"].shape if "tokens" in inputs
+                else inputs["embeds"].shape[:2])
+        t0 = jnp.asarray(t0, jnp.int32)
+        vl = jnp.asarray(valid_len, jnp.int32)
+        if positions is None:
+            positions = inputs.get("positions")
+        if positions is None:
+            positions = self._default_positions(b, s, t0)
+        x = self._embed_inputs(params, inputs, positions)
+        x, new_cache, _ = self._run_blocks(params, x, positions=positions,
+                                           caches=cache, t=t0, valid_len=vl)
+        last = jax.lax.dynamic_slice_in_dim(x, vl - 1, 1, axis=1)
+        last = L.apply_norm(params["final_norm"], last, cfg.norm_type)
+        logits = L.unembed(params["embed"], last, cfg)
         return logits[:, 0], new_cache
 
     def decode_step(self, params, inputs, cache, t):

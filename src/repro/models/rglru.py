@@ -85,10 +85,16 @@ def _lru_scan(log_a: jax.Array, gated_x: jax.Array,
 
 def rglru_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
                 cache: dict | None = None,
+                valid_len: jax.Array | None = None,
                 ) -> tuple[jax.Array, dict | None]:
     """Full Griffin recurrent block.
 
-    cache = {"h": (B,W) fp32, "conv": (B,conv_width-1,W)}."""
+    cache = {"h": (B,W) fp32, "conv": (B,conv_width-1,W)}.
+
+    ``valid_len`` (traced scalar): chunked-prefill padding support — for
+    tokens past ``valid_len`` the recurrence is forced to the identity
+    (log a = 0, gated input = 0), so h carries the last *real* token's
+    state bit-exactly, and the conv state stops at that token too."""
     rg = cfg.rglru
     y_branch = jnp.einsum("bsm,mw->bsw", x, params["w_y"].astype(x.dtype))
     y_branch = jax.nn.gelu(y_branch.astype(jnp.float32),
@@ -96,7 +102,9 @@ def rglru_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
     u = jnp.einsum("bsm,mw->bsw", x, params["w_x"].astype(x.dtype))
     conv_state = cache["conv"] if cache is not None else None
     u, new_conv = causal_conv1d(u, params["conv_w"], params["conv_b"],
-                                conv_state)
+                                conv_state,
+                                valid_len=(valid_len if cache is not None
+                                           else None))
 
     r = jax.nn.sigmoid(_block_diag(u, params["gate_a_w"], params["gate_a_b"]))
     i = jax.nn.sigmoid(_block_diag(u, params["gate_x_w"], params["gate_x_b"]))
@@ -104,6 +112,11 @@ def rglru_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
     a_sq = jnp.exp(2.0 * log_a)
     gated = jnp.sqrt(jnp.maximum(1.0 - a_sq, 1e-12)) * (
         i * u.astype(jnp.float32))
+    if valid_len is not None:
+        live = (jnp.arange(x.shape[1])
+                < jnp.asarray(valid_len, jnp.int32))[None, :, None]
+        log_a = jnp.where(live, log_a, 0.0)
+        gated = jnp.where(live, gated, 0.0)
 
     h0 = cache["h"] if cache is not None else None
     if cache is not None and x.shape[1] == 1:
@@ -182,6 +195,64 @@ def window_attention_decode(q: jax.Array, cache: dict, k_new: jax.Array,
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bkgst,btkd->bskgd", probs, cv.astype(jnp.float32))
     ctx = ctx.reshape(b, 1, h, d).astype(q.dtype)
+    return ctx, {"k": ck, "v": cv, "pos": cpos}
+
+
+def window_attention_chunk(q: jax.Array, cache: dict, k_new: jax.Array,
+                           v_new: jax.Array, t0: jax.Array,
+                           valid_len: jax.Array,
+                           window: int) -> tuple[jax.Array, dict]:
+    """Chunked-prefill attention against the ring-buffer window cache.
+
+    q (B,C,H,D): rotated queries at absolute positions t0..t0+C-1;
+    k_new/v_new (B,C,K,D) the chunk's keys/values; ``t0``/``valid_len``
+    are traced scalars — only the first ``valid_len`` chunk tokens are
+    real (the rest is bucket padding).  Queries attend both the ring
+    cache (earlier chunks, per-slot absolute positions) and the in-chunk
+    keys under the causal window mask; pad tokens are invisible as keys
+    and are never written back, so padding can never evict a real
+    in-window entry.  Returns (context (B,C,H,D), new_cache)."""
+    b, c, h, d = q.shape
+    t0 = jnp.asarray(t0, jnp.int32)
+    vl = jnp.asarray(valid_len, jnp.int32)
+    offs = jnp.arange(c, dtype=jnp.int32)
+    qpos = t0 + offs                                            # (C,)
+    # one kv sequence: ring slots first (cache["pos"] holds absolute
+    # positions, -1 = never written), then the chunk with pads masked out
+    kv_pos = jnp.concatenate(
+        [cache["pos"],
+         jnp.broadcast_to(jnp.where(offs < vl, qpos, -1), (b, c))], axis=1)
+    k_all = jnp.concatenate([cache["k"].astype(q.dtype), k_new], axis=1)
+    v_all = jnp.concatenate([cache["v"].astype(q.dtype), v_new], axis=1)
+    kh = k_all.shape[2]
+    g = h // kh
+    qf = q.reshape(b, c, kh, g, d).astype(jnp.float32) * (d ** -0.5)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qf, k_all.astype(jnp.float32))
+    valid = ((kv_pos[:, None, :] >= 0)
+             & (kv_pos[:, None, :] <= qpos[None, :, None])
+             & (kv_pos[:, None, :] > qpos[None, :, None] - window))
+    scores = jnp.where(valid[:, None, None, :, :], scores, -2.38e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v_all.astype(jnp.float32))
+    ctx = ctx.reshape(b, c, h, d).astype(q.dtype)
+
+    # ring update: the last min(C, window) *real* tokens land at their
+    # pos % window slots.  Pads are routed to a throwaway slot appended
+    # past the ring (scatter drops it below), so they overwrite nothing.
+    take = min(c, window)
+    start = jnp.clip(vl - take, 0, c - take)
+    widx = start + jnp.arange(take, dtype=jnp.int32)
+    wpos = t0 + widx
+    slots = jnp.where(widx < vl, jnp.mod(wpos, window), window)
+
+    def put(buf, upd):
+        padded = jnp.concatenate([buf, jnp.zeros_like(buf[:, :1])], axis=1)
+        return padded.at[:, slots].set(upd.astype(buf.dtype))[:, :window]
+
+    ck = put(cache["k"], jax.lax.dynamic_slice_in_dim(k_new, start, take, 1))
+    cv = put(cache["v"], jax.lax.dynamic_slice_in_dim(v_new, start, take, 1))
+    cpos = put(cache["pos"][..., None],
+               jnp.broadcast_to(wpos[None, :, None], (b, take, 1)))[..., 0]
     return ctx, {"k": ck, "v": cv, "pos": cpos}
 
 

@@ -40,9 +40,16 @@ def ssm_specs(cfg: ModelConfig, ssm: SSMConfig) -> dict:
 
 def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
                   state: jax.Array | None = None,
+                  valid_len: jax.Array | None = None,
                   ) -> tuple[jax.Array, jax.Array]:
     """Depthwise causal conv.  x (B,S,C), w (W,C).  state (B,W-1,C) holds the
-    trailing context from previous steps.  Returns (y, new_state)."""
+    trailing context from previous steps.  Returns (y, new_state).
+
+    ``valid_len`` (traced scalar, chunked-prefill padding): only the first
+    ``valid_len`` tokens of ``x`` are real — the returned state is the
+    trailing context as of that token, so bucket padding never leaks into
+    later chunks or decode steps.  (Conv *outputs* at padded positions are
+    garbage; callers discard them.)"""
     width = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
@@ -51,7 +58,15 @@ def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
     y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
             for i in range(width))
     y = y + b.astype(x.dtype)
-    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    if width <= 1:
+        new_state = state
+    elif valid_len is None:
+        new_state = xp[:, -(width - 1):, :]
+    else:
+        # xp index of real token i is (W-1)+i, so the W-1 entries that
+        # precede real position valid_len start at xp index valid_len
+        new_state = jax.lax.dynamic_slice_in_dim(
+            xp, jnp.asarray(valid_len, jnp.int32), width - 1, axis=1)
     return y, new_state
 
 
@@ -165,8 +180,14 @@ def _expand_groups(t: jax.Array, nh: int) -> jax.Array:
 
 def mamba2_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
                  cache: dict | None = None,
+                 valid_len: jax.Array | None = None,
                  ) -> tuple[jax.Array, dict | None]:
-    """Full Mamba-2 mixer.  cache = {"conv": (B,W-1,C), "ssd": (B,H,P,N)}."""
+    """Full Mamba-2 mixer.  cache = {"conv": (B,W-1,C), "ssd": (B,H,P,N)}.
+
+    ``valid_len`` (traced scalar): chunked-prefill padding support — the
+    tokens past ``valid_len`` get dt=0, which makes them *exact* no-ops
+    for the SSD state (decay exp(0*a)=1, input contribution dt*... = 0),
+    and the conv state is taken as of the last real token."""
     ssm = cfg.ssm
     bsz, s, _ = x.shape
     di, g, n, nh, p = (ssm.d_inner, ssm.num_groups, ssm.state_dim,
@@ -175,12 +196,17 @@ def mamba2_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
     z, xbc, dt = _split_proj(zxbcdt, ssm)
     conv_state = cache["conv"] if cache is not None else None
     xbc, new_conv = causal_conv1d(xbc, params["conv_w"], params["conv_b"],
-                                  conv_state)
+                                  conv_state,
+                                  valid_len=(valid_len if cache is not None
+                                             else None))
     xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
     x_ssm = xbc[..., :di].reshape(bsz, s, nh, p)
     b_mat = _expand_groups(xbc[..., di:di + g * n].reshape(bsz, s, g, n), nh)
     c_mat = _expand_groups(xbc[..., di + g * n:].reshape(bsz, s, g, n), nh)
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    if valid_len is not None:
+        live = jnp.arange(s) < jnp.asarray(valid_len, jnp.int32)
+        dtv = jnp.where(live[None, :, None], dtv, 0.0)
     a = -jnp.exp(params["A_log"])
 
     if cache is not None and s == 1:

@@ -20,7 +20,9 @@ from repro.serving.cluster import (ClusterMetrics, ClusterRuntime,
 from repro.serving.tenants import (build_paper_plans, cluster_plan,
                                    cluster_plans, engine_version_sets,
                                    lm_serving_plans)
-from repro.serving.engine import QUANTUM_BUCKETS, QuantumHandle, ServingEngine
+from repro.serving.engine import (PREFILL_CHUNK_LEN, QUANTUM_BUCKETS,
+                                  PrefillQuantum, QuantumHandle,
+                                  ServingEngine)
 from repro.serving.version_cache import VersionCache, VersionEntry, tiles_key
 
 __all__ = [
@@ -30,6 +32,7 @@ __all__ = [
     "ClusterMetrics", "ClusterRuntime", "EngineTenant", "build_cluster",
     "build_paper_plans", "cluster_plan", "cluster_plans",
     "engine_version_sets", "lm_serving_plans",
-    "QUANTUM_BUCKETS", "QuantumHandle", "ServingEngine",
+    "PREFILL_CHUNK_LEN", "QUANTUM_BUCKETS", "PrefillQuantum",
+    "QuantumHandle", "ServingEngine",
     "VersionCache", "VersionEntry", "tiles_key",
 ]

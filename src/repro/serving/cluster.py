@@ -96,6 +96,9 @@ class _TenantState:
     busy: float = 0.0              # occupancy-weighted unit-time
     alloc: float = 0.0             # granted unit-time
     records: list = dataclasses.field(default_factory=list)
+    prefill_last: bool = False     # prefill/decode alternation state
+    prefill_quanta: int = 0        # prefill chunks dispatched
+    ttft: dict = dataclasses.field(default_factory=dict)   # rid -> ttft
 
 
 @dataclasses.dataclass
@@ -112,6 +115,7 @@ class ClusterMetrics:
     host_syncs: dict[str, int] = dataclasses.field(default_factory=dict)
     tokens_per_sync: dict[str, float] = dataclasses.field(
         default_factory=dict)
+    prefill_quanta: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def mean_levels(self) -> dict[str, float]:
@@ -191,6 +195,16 @@ class ClusterRuntime:
         return {t.name: t.engine.warmup(prompt_lens=prompt_lens,
                                         quantum_buckets=quantum_buckets)
                 for t in self.tenants}
+
+    def tenant_prompts(self, wl: Workload) -> dict[str, np.ndarray]:
+        """Per-tenant prompt tables for ``wl`` — seeded per tenant
+        position, so co-located tenants never replay byte-identical
+        prompt streams, while staying deterministic per (workload seed,
+        cluster layout)."""
+        return {t.name: synth_prompts(wl.n_queries, wl.prompt_len,
+                                      t.engine.cfg.vocab_size,
+                                      wl.seed + idx)
+                for idx, t in enumerate(self.tenants)}
 
     def _footprint(self, tenant: EngineTenant, units: int) -> tuple:
         key = (tenant.name, units)
@@ -278,9 +292,7 @@ class ClusterRuntime:
             raise KeyError(f"workload tenants {sorted(unknown)} have no "
                            f"engine; cluster serves {sorted(by_name)}")
         lens = wl.prompt_lengths()
-        prompts = {t.name: synth_prompts(wl.n_queries, wl.prompt_len,
-                                         t.engine.cfg.vocab_size, wl.seed)
-                   for t in self.tenants}
+        prompts = self.tenant_prompts(wl)
         arrivals = collections.deque(
             (at, name, rid) for rid, (at, name)
             in enumerate(sorted(wl.arrivals)))
@@ -295,13 +307,25 @@ class ClusterRuntime:
                 req = Request(rid=rid,
                               prompt=prompts[t.name][rid, :lens[rid]],
                               max_new_tokens=wl.max_new_tokens)
-                if not t.engine.add_request(req):
+                try:
+                    admitted = t.engine.admit_request(req)
+                except ValueError:
+                    # inadmissible prompt length: hard conflict, drop it
+                    if rid not in rejected:
+                        rejected.add(rid)
+                        self.conflicts += 1
+                        self.tenant_conflicts[t.name] += 1
+                    st.pending.popleft()
+                    continue
+                if not admitted:
                     if rid not in rejected:       # QoS conflict, once/query
                         rejected.add(rid)
                         self.conflicts += 1
                         self.tenant_conflicts[t.name] += 1
                     break
                 meta[rid] = (t.name, at, now)
+                if req.output:                    # monolithic admission
+                    st.ttft[rid] = now - at
                 st.pending.popleft()
             active = [meta[r.rid][2] for r in t.engine.slot_req
                       if r is not None]
@@ -364,17 +388,40 @@ class ClusterRuntime:
                     # pending); time still advances below, so the next tick
                     # re-plans instead of spinning
                     continue
-                occupancy = t.engine.active_slots / t.engine.slots
+                # per-engine prefill/decode alternation: an engine with a
+                # prompt mid-prefill spends every other quantum (or every
+                # quantum, if nothing is decodable) on one prefill chunk,
+                # so admissions are metered without starving its decodes
+                do_prefill = t.engine.should_prefill(st.prefill_last)
+                st.prefill_last = do_prefill
+                if do_prefill:
+                    occupancy = 1.0 / t.engine.slots   # the prefilling row
+                    pf = t.engine.prefill_step()
+                    st.prefill_quanta += 1
+                    launched.append((t, st, None, occupancy, pf))
+                    continue
+                # decode occupancy: slots still mid-prefill are skipped by
+                # the decode quantum and must not be charged as busy
+                occupancy = (t.engine.active_slots
+                             - t.engine.prefill_pending) / t.engine.slots
                 handle = (t.engine.begin_quantum(q_tick)
                           if self.fused else None)
-                launched.append((t, st, handle, occupancy))
+                launched.append((t, st, handle, occupancy, None))
 
             # collect phase: one host sync per engine per quantum
             finished: list[tuple[str, Request, int]] = []
+            prefill_done: list[tuple[_TenantState, int]] = []
             held: list[tuple] = []
             max_run = 1
-            for t, st, handle, occupancy in launched:
-                if self.fused:
+            for t, st, handle, occupancy, pf in launched:
+                if pf is not None:
+                    fin = []
+                    steps = 1
+                    row_steps = {}
+                    row_tokens = 1.0          # the one row being prefilled
+                    if pf.finished:
+                        prefill_done.append((st, pf.rid))
+                elif self.fused:
                     fin = t.engine.finish_quantum(handle)
                     steps = handle.steps if handle is not None else 1
                     row_steps = (handle.row_steps if handle is not None
@@ -414,13 +461,16 @@ class ClusterRuntime:
                 else:
                     st.busy += grant * self.step_dt * row_tokens / slots
                     st.alloc += grant * self.step_dt * steps
+            for st, rid in prefill_done:
+                st.ttft[rid] = now - meta[rid][1]
             for name, req, off in finished:
                 _, at, _ = meta[req.rid]
                 st = self._state[name]
                 fin = now if self.wall_clock else t_begin + off * self.step_dt
                 st.records.append(QueryRecord(
                     tenant=name, arrival=at, finish=fin,
-                    qos_s=by_name[name].plan.qos_s))
+                    qos_s=by_name[name].plan.qos_s,
+                    ttft_s=st.ttft.get(req.rid)))
 
         for t in self.tenants:               # return whatever is still held
             self._release(self._state[t.name])
@@ -454,4 +504,6 @@ class ClusterRuntime:
             host_syncs={t.name: t.engine.host_syncs
                         for t in self.tenants},
             tokens_per_sync={t.name: t.engine.tokens_per_sync
-                             for t in self.tenants})
+                             for t in self.tenants},
+            prefill_quanta={t.name: self._state[t.name].prefill_quanta
+                            for t in self.tenants})

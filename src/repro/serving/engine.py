@@ -10,6 +10,15 @@ reference.  This is the engine the examples drive on CPU with reduced
 models; at pod scale the same functions are jitted with the serve-mode
 shardings (launch/serve.py).
 
+Admission is chunked and length-bucketed (``chunked_prefill=True``):
+``admit_request`` validates the prompt and queues power-of-two-bucketed
+prefill chunks; ``prefill_step`` runs one chunk — the prefill-side
+dispatch quantum — into the slot's accumulating row cache.  Compiled
+prefill shapes are the bucket table, never the prompt-length
+distribution, so mixed-length traffic performs zero post-warmup
+retraces, and the runtimes interleave chunks with decode quanta so a
+long prompt cannot stall co-resident decodes (docs/ARCHITECTURE.md §5).
+
 The VELTAIR integration point: ``set_interference_level`` selects the
 code version the adaptive compiler produced for that pressure — either
 from a compiled ``VersionSet`` (the multi-version tables of an analytical
@@ -45,6 +54,17 @@ from repro.serving.version_cache import VersionCache
 # Quanta larger than the top bucket split into multiple fused calls.
 QUANTUM_BUCKETS = (1, 2, 4, 8, 16)
 
+# Default prefill chunk: prompts are split into chunks of this many
+# tokens, each a schedulable quantum; the tail is padded UP to a
+# power-of-two bucket, so the compiled prefill shapes are the bucket
+# table {1, 2, ..., PREFILL_CHUNK_LEN}, not the prompt-length
+# distribution — mixed-length traffic performs zero post-warmup retraces.
+PREFILL_CHUNK_LEN = 16
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
 # Built-in interference-level -> tile table (one entry per grid level).
 # Low pressure: big tiles, maximal reuse of the shared cache; high
 # pressure: small private-cache-resident tiles that cede the LLC.
@@ -63,6 +83,25 @@ class Request:
     max_new_tokens: int = 16
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+
+
+@dataclasses.dataclass
+class _PrefillState:
+    """An in-flight chunked prefill occupying a slot (not yet decodable)."""
+    req: Request
+    row_cache: object              # accumulating batch-1 row cache
+    schedule: collections.deque    # remaining chunk sizes (bucket table)
+    done: int = 0                  # real prompt tokens prefilled so far
+
+
+@dataclasses.dataclass
+class PrefillQuantum:
+    """Result of one executed prefill chunk (``prefill_step``)."""
+    slot: int
+    rid: int
+    chunk: int                     # padded chunk size dispatched
+    tokens: int                    # real prompt tokens consumed
+    finished: bool                 # prompt fully prefilled, first token out
 
 
 @dataclasses.dataclass
@@ -86,7 +125,9 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4,
                  max_len: int = 256, greedy: bool = True,
                  version_sets: list | None = None,
-                 quantum_buckets: tuple[int, ...] = QUANTUM_BUCKETS):
+                 quantum_buckets: tuple[int, ...] = QUANTUM_BUCKETS,
+                 chunked_prefill: bool = True,
+                 prefill_chunk_len: int = PREFILL_CHUNK_LEN):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.params = params
@@ -96,6 +137,19 @@ class ServingEngine:
         self.cache = self.model.init_cache(batch_slots, max_len)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)
+        # chunked, length-bucketed admission (the scheduled-prefill path):
+        # chunk sizes are powers of two <= prefill_chunk_len, clamped so a
+        # padded tail can never write past the cache's max_len rows
+        self.chunked_prefill = chunked_prefill
+        self.prefill_chunk_len = min(_next_pow2(prefill_chunk_len),
+                                     _next_pow2(max_len + 1) // 2 or 1)
+        self.prefill_buckets = tuple(
+            1 << i for i in range(self.prefill_chunk_len.bit_length()))
+        self._prefill: dict[int, _PrefillState] = {}   # slot -> state (FIFO)
+        self.prefill_chunks = 0        # chunk quanta executed
+        self.prefill_tokens = 0        # real prompt tokens prefilled
+        self.prefill_pad_tokens = 0    # bucket-padding tokens (waste)
+        self.rejected_invalid = 0      # admissions refused for length
         # pristine single-slot cache row: admissions prefill from this so a
         # reused slot can never leak the previous tenant's KV / SSM state
         self._empty_row = self._slice_row(0)
@@ -130,6 +184,7 @@ class ServingEngine:
         entry = self.version_cache.get(tiles)
         self._entry = entry
         self._prefill_one = entry.prefill
+        self._prefill_chunk = entry.prefill_chunk
         self._decode = entry.decode
 
     @property
@@ -176,16 +231,19 @@ class ServingEngine:
         ``set_interference_level`` calls are dictionary swaps and the step
         that follows them never traces or compiles.
 
-        Decode is shape-stable and always warmed; prefill specializes per
-        prompt length, so pass the lengths the workload will use in
-        ``prompt_lens``.  Every fused K-bucket executable is AOT-compiled
-        alongside (against abstract cache shapes — no decode steps run for
-        them), so the first ``step_quantum`` after warmup never traces
-        either; pass ``quantum_buckets`` to warm a subset.  Memory: one
-        compiled decode + one fused executable per (distinct tile
-        configuration, K-bucket), plus one compiled prefill per
-        (configuration, length).  Returns the version-cache stats
-        snapshot."""
+        Decode is shape-stable and always warmed.  On the chunked
+        admission path every prefill-chunk bucket is warmed too, so
+        mixed-length traffic never retraces — ``prompt_lens`` is only
+        needed for the monolithic (``chunked_prefill=False``) path, whose
+        prefill specializes per exact length.  Every fused K-bucket
+        executable is AOT-compiled alongside (against abstract cache
+        shapes — no decode steps run for them), so the first
+        ``step_quantum`` after warmup never traces either; pass
+        ``quantum_buckets`` to warm a subset.  Memory: one compiled
+        decode + one fused executable per (distinct tile configuration,
+        K-bucket), one chunked prefill per (configuration, chunk bucket),
+        plus one compiled prefill per (configuration, length in
+        ``prompt_lens``).  Returns the version-cache stats snapshot."""
         if levels is None:
             levels = [cm.grid_point(i) for i in range(cm.NUM_LEVELS)]
         buckets = (self.quantum_buckets if quantum_buckets is None
@@ -213,6 +271,12 @@ class ServingEngine:
             for k in buckets:
                 self.version_cache.quantum(entry, k, self.params,
                                            self.cache, self.slots)
+            if self.chunked_prefill:
+                for cb in self.prefill_buckets:
+                    lg, _ = entry.prefill_chunk(
+                        self.params, jnp.zeros((1, cb), jnp.int32),
+                        self._empty_row, jnp.int32(0), jnp.int32(cb))
+                    lg.block_until_ready()
             for plen in prompt_lens:
                 lg, _ = entry.prefill(
                     self.params, jnp.zeros((1, int(plen)), jnp.int32),
@@ -256,16 +320,58 @@ class ServingEngine:
             return jax.tree_util.tree_map_with_path(put, cache, row_cache)
         return jax.jit(write, donate_argnums=(0,))
 
-    def add_request(self, req: Request) -> bool:
-        """Admit a request: prefill its prompt into its slot's cache rows.
+    def _prefill_schedule(self, n: int) -> collections.deque:
+        """Chunk sizes for an ``n``-token prompt: fixed-size full chunks
+        plus a power-of-two tail bucket (padded up), split further if the
+        padding would write past ``max_len``.  Every size is a power of
+        two <= ``prefill_chunk_len``, so the compiled-prefill shape set
+        is the bucket table, never the prompt-length distribution."""
+        out: collections.deque = collections.deque()
+        done = 0
+        c = self.prefill_chunk_len
+        while n - done >= c:
+            out.append(c)
+            done += c
+        rem = n - done
+        while rem:
+            b = _next_pow2(rem)
+            if done + b <= self.max_len:
+                out.append(b)                  # padded tail bucket
+                break
+            out.append(b // 2)                 # largest pow2 < rem, all real
+            done += b // 2
+            rem -= b // 2
+        return out
 
-        Single-row prefill runs on a batch-1 view of a pristine row, then
-        writes the slot row in place (slot caches are independent along
-        the batch axis).  Prompts of any length join at any step — decode
-        is per-slot, so no alignment with resident slots is required."""
+    def admit_request(self, req: Request) -> bool:
+        """Reserve a slot for ``req`` and queue its prefill chunks WITHOUT
+        executing them — callers meter prefill by pumping
+        :meth:`prefill_step` (runtimes interleave it with decode quanta).
+
+        Returns False when no slot is free (retry later).  Raises
+        ``ValueError`` for prompts the cache row cannot hold — empty, or
+        ``len(prompt) >= max_len`` (a clamped row write would silently
+        corrupt the cache); such a request must be dropped, not retried.
+
+        With ``chunked_prefill=False`` the whole prompt prefills here,
+        monolithically and per-exact-length (the reference path)."""
+        n = len(req.prompt)
+        if n < 1 or n >= self.max_len:
+            self.rejected_invalid += 1
+            raise ValueError(
+                f"prompt length {n} outside [1, {self.max_len - 1}]: the "
+                f"cache row holds max_len={self.max_len} positions and "
+                "needs at least one free for decode")
         slot = self._free_slot()
         if slot is None:
             return False
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = n
+        if self.chunked_prefill:
+            self._prefill[slot] = _PrefillState(
+                req=req, row_cache=self._empty_row,
+                schedule=self._prefill_schedule(n))
+            return True
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         logits, row_cache = self._prefill_one(self.params, toks,
                                               self._empty_row)
@@ -274,14 +380,85 @@ class ServingEngine:
         first = int(jnp.argmax(logits[0]))      # prompt's first sampled token
         self.host_syncs += 1
         self.tokens_decoded += 1
+        self.prefill_tokens += n
         req.output.append(first)
-        self.slot_req[slot] = req
-        self.slot_pos[slot] = len(req.prompt)
+        return True
+
+    @property
+    def prefill_pending(self) -> int:
+        """Slots whose prompts are not fully prefilled yet."""
+        return len(self._prefill)
+
+    @property
+    def decode_ready(self) -> bool:
+        """Any occupied slot past prefill (eligible for decode quanta)."""
+        return any(r is not None and i not in self._prefill
+                   for i, r in enumerate(self.slot_req))
+
+    def should_prefill(self, last_was_prefill: bool) -> bool:
+        """Strict prefill/decode alternation (shared by both runtimes):
+        spend this quantum on a prefill chunk when a prompt is
+        mid-prefill and either nothing is decodable yet or the previous
+        quantum was a decode — admissions are metered without starving
+        co-resident decodes, and a long prompt steals at most every
+        other quantum."""
+        return bool(self._prefill) and (not self.decode_ready
+                                        or not last_was_prefill)
+
+    def prefill_step(self) -> PrefillQuantum | None:
+        """Run ONE prefill chunk — the prefill-side dispatch quantum —
+        for the oldest slot still prefilling (FIFO).
+
+        The chunk prefills into the slot's accumulating batch-1 row cache
+        at its start-position offset; only the final chunk pays a
+        device->host sync (the first-token argmax) and writes the row
+        into the batched cache, making the slot decodable.  Returns what
+        ran, or None when nothing is prefilling."""
+        if not self._prefill:
+            return None
+        slot, st = next(iter(self._prefill.items()))
+        c = st.schedule.popleft()
+        n = len(st.req.prompt)
+        valid = min(c, n - st.done)
+        toks = np.zeros(c, np.int32)
+        toks[:valid] = st.req.prompt[st.done:st.done + valid]
+        logits, st.row_cache = self._prefill_chunk(
+            self.params, jnp.asarray(toks)[None], st.row_cache,
+            jnp.int32(st.done), jnp.int32(valid))
+        st.done += valid
+        self.prefill_chunks += 1
+        self.prefill_tokens += valid
+        self.prefill_pad_tokens += c - valid
+        finished = not st.schedule
+        if finished:
+            self.cache = self._row_writer(self.cache, st.row_cache,
+                                          jnp.int32(slot))
+            first = int(jnp.argmax(logits[0]))   # the ONE sync per admission
+            self.host_syncs += 1
+            self.tokens_decoded += 1
+            st.req.output.append(first)
+            del self._prefill[slot]
+        return PrefillQuantum(slot=slot, rid=st.req.rid, chunk=c,
+                              tokens=valid, finished=finished)
+
+    def add_request(self, req: Request) -> bool:
+        """Admit a request and run its whole prefill synchronously (the
+        convenience path for tests/examples; runtimes meter prefill as
+        scheduled quanta via :meth:`admit_request` + :meth:`prefill_step`).
+
+        Chunked and monolithic admission produce token-identical
+        requests; chunked just runs through the bucket table."""
+        if not self.admit_request(req):
+            return False
+        while not req.output:                   # drain (FIFO) to this req
+            self.prefill_step()
         return True
 
     def step(self) -> list[Request]:
-        """One decode step for every active slot; returns finished reqs."""
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        """One decode step for every active slot; returns finished reqs.
+        Slots still mid-prefill are not decodable and are skipped."""
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and i not in self._prefill]
         if not active:
             return []
         toks = np.zeros(self.slots, np.int32)
@@ -322,8 +499,10 @@ class ServingEngine:
         token-for-token identical to ``k`` sequential :meth:`step` calls.
         The executed quantum is capped at the largest K-bucket — callers
         dispatching bigger quanta issue further calls with the leftover
-        (one sync each).  Returns ``None`` when no slot is active."""
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        (one sync each).  Returns ``None`` when no slot is active (slots
+        still mid-prefill are not decodable)."""
+        active = [i for i, r in enumerate(self.slot_req)
+                  if r is not None and i not in self._prefill]
         if not active or k <= 0:
             return None
         n_left = np.zeros(self.slots, np.int32)
@@ -391,6 +570,8 @@ class ServingEngine:
                 and steps < max_steps:
             while pending and self.add_request(pending[0]):
                 pending.popleft()
+            while self._prefill:        # slots admitted via admit_request
+                self.prefill_step()
             done.extend(self.step())
             steps += 1
         return done

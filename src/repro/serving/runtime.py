@@ -125,7 +125,18 @@ class OnlineRuntime:
     boundaries, and the engine syncs the host exactly once per quantum
     (``engine.host_syncs`` / ``engine.tokens_per_sync`` measure it).
     Completions inside a quantum keep exact virtual finish times — the
-    engine reports per-request executed steps."""
+    engine reports per-request executed steps.
+
+    Admission is metered: a prompt is admitted as a queue of prefill
+    *chunks* (``engine.admit_request`` + ``engine.prefill_step``), and
+    each chunk is one scheduled quantum — it passes through the same
+    counter poll / level switch as a decode quantum, advances the
+    virtual clock, and is charged to ``busy``/``alloc``.  Prefill and
+    decode quanta strictly alternate while both have work, so a long
+    prompt stalls co-resident decodes for at most one chunk, and TTFT
+    (``QueryRecord.ttft_s`` / ``ServingMetrics.avg_ttft_s``) is real
+    virtual time, not zero.  Inadmissible prompts (``len >= max_len``)
+    are rejected at admission and counted as conflicts."""
 
     def __init__(self, engine: ServingEngine, policy: Policy,
                  plans: dict[str, ModelPlan], hw: cm.HardwareSpec, *,
@@ -147,6 +158,9 @@ class OnlineRuntime:
         self.conflicts = 0
         self.steps = 0
         self.quanta = 0                  # fused dispatch quanta issued
+        self.prefill_quanta = 0          # prefill-chunk quanta issued
+        self._prefill_last = False       # prefill/decode alternation state
+        self._ttft: dict[int, float] = {}   # rid -> time to first token
         self._cursor = 0                 # layer-block cursor (fused mode)
         self._cursor_n = 1               # cursor modulus (head plan layers)
         # wall time spent inside set_interference_level — with a warmed
@@ -238,7 +252,18 @@ class OnlineRuntime:
                 t, tenant, rid = pending[0]
                 req = Request(rid=rid, prompt=prompts[rid, :lens[rid]],
                               max_new_tokens=wl.max_new_tokens)
-                if not self.engine.add_request(req):
+                try:
+                    admitted = self.engine.admit_request(req)
+                except ValueError:
+                    # inadmissible prompt (len >= max_len would corrupt
+                    # the cache row): a hard conflict — count once and
+                    # drop, never retry
+                    if rid not in rejected:
+                        rejected.add(rid)
+                        self.conflicts += 1
+                    pending.popleft()
+                    continue
+                if not admitted:
                     # engine full: a QoS conflict in the paper's sense,
                     # counted once per query at its first failed admission
                     if rid not in rejected:
@@ -246,6 +271,8 @@ class OnlineRuntime:
                         self.conflicts += 1
                     break
                 meta[rid] = (tenant, t, now)
+                if req.output:               # monolithic engines prefill
+                    self._ttft[rid] = now - t   # inside admit_request
                 pending.popleft()
             n_active = self.engine.active_slots
             if n_active == 0:
@@ -269,8 +296,20 @@ class OnlineRuntime:
             self.compile_time_s += time.perf_counter() - t0
             self.level_trace.append(level)
 
+            # prefill chunks and decode quanta strictly alternate while
+            # both have work: a long prompt never stalls co-resident
+            # decodes for more than one chunk (the granularity claim,
+            # applied to the admission path)
+            do_prefill = self.engine.should_prefill(self._prefill_last)
+            self._prefill_last = do_prefill
             handle = None
-            if self.fused:
+            finished: list = []
+            pf = None
+            if do_prefill:
+                pf = self.engine.prefill_step()
+                steps_run = 1
+                self.prefill_quanta += 1
+            elif self.fused:
                 q = self._plan_quantum(meta, sample, now)
                 handle = self.engine.begin_quantum(q)
                 finished = self.engine.finish_quantum(handle)
@@ -287,12 +326,16 @@ class OnlineRuntime:
             self.steps += steps_run
             t_begin = now
             now += dt
-            if handle is not None and not self.wall_clock:
+            if pf is not None:
+                busy += dt                   # the one row being prefilled
+                if pf.finished:
+                    self._ttft[pf.rid] = now - meta[pf.rid][1]
+            elif handle is not None and not self.wall_clock:
                 # exact virtual accounting: each row was busy for the
                 # steps it actually decoded, not the full quantum
                 busy += float(handle.n_left.sum()) * self.step_dt
             else:
-                busy += n_active * dt
+                busy += (n_active - self.engine.prefill_pending) * dt
             alloc += self.engine.slots * dt
             for req in finished:
                 tenant, arrival, _ = meta[req.rid]
@@ -301,7 +344,8 @@ class OnlineRuntime:
                     fin = t_begin + handle.row_steps[req.rid] * self.step_dt
                 self.records.append(QueryRecord(
                     tenant=tenant, arrival=arrival, finish=fin,
-                    qos_s=self.plans[tenant].qos_s))
+                    qos_s=self.plans[tenant].qos_s,
+                    ttft_s=self._ttft.get(req.rid)))
 
         return summarize(self.records, wl.qps,
                          self.conflicts / max(wl.n_queries, 1), busy, alloc)

@@ -18,7 +18,9 @@ Keys are derived from the same tile dictionaries the engine's level
 tables produce (``VersionSet`` selections or ``DEFAULT_LEVEL_TILES``), so
 the cache holds at most one entry per distinct code version (<= NUM_LEVELS
 per engine).  Memory footprint: one traced+compiled prefill per prompt
-length warmed plus one decode executable per entry, plus one fused
+length warmed plus one decode executable per entry, one chunked-prefill
+executable per (entry, chunk bucket) — the serving admission path, which
+is why mixed-length traffic never retraces after warmup — plus one fused
 quantum-decode executable per (entry, K-bucket) actually used.
 
 Donation: the decode and quantum executables donate their cache argument
@@ -58,6 +60,11 @@ class VersionEntry:
     tiles: dict[str, dict]
     prefill: Callable          # (params, tokens (1,L), row_cache) -> ...
     decode: Callable           # (params, {"tokens": (B,)}, cache, t) -> ...
+    # bucketed prefill quantum: (params, tokens (1,C), row_cache,
+    #   t0, valid_len) -> (logits, row_cache).  One trace per chunk
+    #   bucket C — t0/valid_len are traced, so mixed-length traffic
+    #   shares the bucket's executable instead of retracing per length.
+    prefill_chunk: Callable = None
     # K-bucket -> AOT-compiled fused quantum decode
     #   (params, tokens (B,), cache, pos (B,), n_left (B,)) -> (block, cache, pos)
     quanta: dict[int, Callable] = dataclasses.field(default_factory=dict)
@@ -117,11 +124,19 @@ class VersionCache:
             with dispatch.tile_context(snap):
                 return model.decode_step(params, inputs, cache, t)
 
+        def prefill_chunk(params, tokens, row_cache, t0, valid_len):
+            self.traces += 1
+            with dispatch.tile_context(snap):
+                return model.prefill_chunk(params, {"tokens": tokens},
+                                           row_cache, t0, valid_len)
+
         # decode donates its cache (in-place KV/SSM update; the engine
-        # adopts the returned cache every step); prefill must NOT — its
-        # cache argument is the shared pristine row (see module docstring)
+        # adopts the returned cache every step); prefill and
+        # prefill_chunk must NOT — their cache argument may be the
+        # shared pristine row (see module docstring)
         return VersionEntry(key=key, tiles=snap, prefill=jax.jit(prefill),
-                            decode=jax.jit(decode, donate_argnums=(2,)))
+                            decode=jax.jit(decode, donate_argnums=(2,)),
+                            prefill_chunk=jax.jit(prefill_chunk))
 
     # ------------------------------------------------------------------
     def quantum(self, entry: VersionEntry, k: int, params: Any,

@@ -1,9 +1,52 @@
-"""QoS targets, satisfaction tracking and serving metrics."""
+"""QoS targets, SLO tiers, satisfaction tracking and serving metrics.
+
+Tier model (paper §scheduling, PREMA-style latency tiers): every request
+belongs to one of three SLO tiers.  A tier scales the tenant's base QoS
+target into an absolute *deadline* (``arrival + deadline_scale *
+qos_s``) and carves out a TTFT sub-deadline (``arrival + ttft_frac *
+deadline_scale * qos_s``) for the first token.  Schedulers order
+quanta by earliest deadline; the admission controller may shed work
+from ``sheddable`` tiers whose deadline is already hopeless.
+
+Untiered records (``deadline is None``) keep the legacy semantics:
+satisfied iff ``latency <= qos_s``.  That keeps every pre-existing
+workload's qos_rate bit-identical.
+"""
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+TIER_ORDER = ("interactive", "standard", "batch")
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One SLO tier: how a tenant's base QoS target becomes a deadline."""
+    name: str
+    deadline_scale: float     # deadline = arrival + deadline_scale * qos_s
+    ttft_frac: float          # TTFT deadline = arrival + ttft_frac * scale*qos
+    sheddable: bool           # admission may reject when deadline is hopeless
+
+
+DEFAULT_TIERS: dict[str, TierSpec] = {
+    "interactive": TierSpec("interactive", 1.0, 0.4, sheddable=True),
+    "standard": TierSpec("standard", 2.5, 0.6, sheddable=True),
+    "batch": TierSpec("batch", 8.0, 1.0, sheddable=False),
+}
+
+
+def tier_spec(name: str | None,
+              tiers: dict[str, TierSpec] | None = None) -> TierSpec:
+    """Resolve a tier name (``None`` -> standard) to its spec."""
+    table = tiers or DEFAULT_TIERS
+    if name is None:
+        return table["standard"]
+    if name not in table:
+        raise ValueError(f"unknown SLO tier {name!r}; "
+                         f"expected one of {sorted(table)}")
+    return table[name]
 
 
 @dataclasses.dataclass
@@ -15,6 +58,10 @@ class QueryRecord:
     units_time: float = 0.0          # integral of units x time (efficiency)
     ttft_s: float | None = None      # time to first token (metered prefill;
                                      # None where the path cannot observe it)
+    tier: str = "standard"           # SLO tier label (reporting only unless
+                                     # deadline is set)
+    deadline: float | None = None    # absolute deadline; None = legacy
+                                     # qos_s-relative satisfaction
 
     @property
     def latency(self) -> float:
@@ -22,7 +69,19 @@ class QueryRecord:
 
     @property
     def satisfied(self) -> bool:
+        if self.deadline is not None:
+            return self.finish <= self.deadline
         return self.latency <= self.qos_s
+
+
+@dataclasses.dataclass
+class TierMetrics:
+    """Per-tier slice of the same record schema both runtimes emit."""
+    n_queries: int
+    qos_rate: float
+    avg_latency_s: float
+    p99_latency_s: float
+    avg_ttft_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -37,14 +96,39 @@ class ServingMetrics:
     n_queries: int = 0              # completed queries behind these numbers
     avg_ttft_s: float = 0.0         # mean time-to-first-token over records
                                     # that observed one (0.0 otherwise)
+    qps_at_qos: float = 0.0         # queries served *under QoS* per second
+                                    # over the serving span (headline)
+    shed_queries: int = 0           # rejected by admission control (counted,
+                                    # never silently dropped)
+    deferred_queries: int = 0       # admissions delayed past arrival by the
+                                    # admission controller
+    per_tier: dict[str, TierMetrics] = dataclasses.field(default_factory=dict)
+
+
+def _tier_slice(records: list[QueryRecord]) -> TierMetrics:
+    lats = np.array([r.latency for r in records])
+    ttfts = [r.ttft_s for r in records if r.ttft_s is not None]
+    return TierMetrics(
+        n_queries=len(records),
+        qos_rate=float(np.mean([r.satisfied for r in records])),
+        avg_latency_s=float(lats.mean()),
+        p99_latency_s=float(np.percentile(lats, 99)),
+        avg_ttft_s=float(np.mean(ttfts)) if ttfts else 0.0,
+    )
 
 
 def summarize(records: list[QueryRecord], qps_offered: float,
               conflict_rate: float, busy_unit_time: float,
-              alloc_unit_time: float) -> ServingMetrics:
+              alloc_unit_time: float, *, shed: int = 0,
+              deferred: int = 0) -> ServingMetrics:
+    """The one record->metrics reduction.  Both ``OnlineRuntime.serve``
+    and ``ClusterRuntime.serve`` (per tenant and aggregate) funnel their
+    tier-labelled ``QueryRecord``s through here, so per-tier
+    qos_rate/TTFT/p99 report identically from either path."""
     if not records:
         return ServingMetrics(qps_offered, 0.0, float("inf"), float("inf"),
-                              conflict_rate, 0.0, 0.0)
+                              conflict_rate, 0.0, 0.0,
+                              shed_queries=shed, deferred_queries=deferred)
     lats = np.array([r.latency for r in records])
     sat = np.mean([r.satisfied for r in records])
     span = max(max(r.finish for r in records)
@@ -52,6 +136,12 @@ def summarize(records: list[QueryRecord], qps_offered: float,
     avg_units = alloc_unit_time / span
     eff = busy_unit_time / alloc_unit_time if alloc_unit_time > 0 else 0.0
     ttfts = [r.ttft_s for r in records if r.ttft_s is not None]
+    n_sat = int(sum(r.satisfied for r in records))
+    per_tier: dict[str, TierMetrics] = {}
+    for tier in TIER_ORDER:
+        rs = [r for r in records if r.tier == tier]
+        if rs:
+            per_tier[tier] = _tier_slice(rs)
     return ServingMetrics(
         qps_offered=qps_offered,
         qos_rate=float(sat),
@@ -62,6 +152,10 @@ def summarize(records: list[QueryRecord], qps_offered: float,
         unit_efficiency=float(eff),
         n_queries=len(records),
         avg_ttft_s=float(np.mean(ttfts)) if ttfts else 0.0,
+        qps_at_qos=n_sat / span,
+        shed_queries=shed,
+        deferred_queries=deferred,
+        per_tier=per_tier,
     )
 
 
@@ -70,7 +164,8 @@ def compare_metrics(a: ServingMetrics,
     """Field-by-field (a, b) pairs — side-by-side comparison of the same
     workload replayed through the simulator and the real engine."""
     return {f.name: (getattr(a, f.name), getattr(b, f.name))
-            for f in dataclasses.fields(ServingMetrics)}
+            for f in dataclasses.fields(ServingMetrics)
+            if f.name != "per_tier"}
 
 
 def qps_at_qos(sweep: list[tuple[float, ServingMetrics]],

@@ -52,12 +52,17 @@ class TaskState:
     arrival: float
     priority: float = 0.0
     next_layer: int = 0
+    tier: str | None = None          # SLO tier label (core.qos.TIER_ORDER)
+    deadline: float | None = None    # absolute tier-scaled deadline; None
+                                     # falls back to arrival + qos_s
 
     @property
     def done(self) -> bool:
         return self.next_layer >= self.plan.n_layers
 
     def remaining_budget(self, now: float) -> float:
+        if self.deadline is not None:
+            return self.deadline - now
         return (self.arrival + self.plan.qos_s) - now
 
 
@@ -96,6 +101,15 @@ class Policy:
                       now: float) -> list[TaskState]:
         """Dispatch order for waiting tasks (default: FCFS by arrival)."""
         return sorted(pending, key=lambda t: t.arrival)
+
+    def order_by_slack(self, pending: list[TaskState],
+                       now: float) -> list[TaskState]:
+        """Earliest-deadline order (least remaining budget first) — the
+        SLO-tiered runtimes use this when tasks carry tier deadlines;
+        ties break FCFS so untiered tasks degrade to arrival order."""
+        return sorted(pending,
+                      key=lambda t: (t.remaining_budget(now), t.arrival,
+                                     t.tid))
 
     def interference_from_counters(self,
                                    sample: CounterSample) -> cm.Interference:

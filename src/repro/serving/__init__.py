@@ -11,10 +11,13 @@
 See docs/ARCHITECTURE.md for the paper-to-code map.
 """
 from repro.serving.simulator import SimConfig, Simulator, run_sweep
-from repro.serving.request import (poisson_workload, qos_inverse_weights,
+from repro.serving.request import (diurnal_workload, gamma_poisson_workload,
+                                   poisson_workload, qos_inverse_weights,
                                    synth_prompts, uniform_workload)
 from repro.serving.runtime import (OnlineRuntime, Workload, plan_demand,
                                    replay_through_simulator)
+from repro.serving.slo import (AdmissionController, DeadlineBook, SloEntry,
+                               pick_quantum)
 from repro.serving.cluster import (ClusterMetrics, ClusterRuntime,
                                    EngineTenant, build_cluster)
 from repro.serving.tenants import (build_paper_plans, cluster_plan,
@@ -27,8 +30,10 @@ from repro.serving.version_cache import VersionCache, VersionEntry, tiles_key
 
 __all__ = [
     "SimConfig", "Simulator", "run_sweep", "poisson_workload",
+    "gamma_poisson_workload", "diurnal_workload",
     "qos_inverse_weights", "uniform_workload", "synth_prompts",
     "OnlineRuntime", "Workload", "plan_demand", "replay_through_simulator",
+    "AdmissionController", "DeadlineBook", "SloEntry", "pick_quantum",
     "ClusterMetrics", "ClusterRuntime", "EngineTenant", "build_cluster",
     "build_paper_plans", "cluster_plan", "cluster_plans",
     "engine_version_sets", "lm_serving_plans",

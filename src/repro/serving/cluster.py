@@ -61,11 +61,12 @@ from repro.core import cost_model as cm
 from repro.core.allocator import UnitPool
 from repro.core.interference import RunningDemand, read_counters
 from repro.core.layer_block import ModelPlan
-from repro.core.qos import QueryRecord, ServingMetrics, summarize
+from repro.core.qos import QueryRecord, ServingMetrics, TierSpec, summarize
 from repro.core.scheduler import Policy, TaskState
 from repro.serving.engine import ServingEngine, Request
 from repro.serving.request import synth_prompts
 from repro.serving.runtime import Workload, plan_demand
+from repro.serving.slo import AdmissionController, DeadlineBook, pick_quantum
 from repro.serving.tenants import cluster_plans
 
 
@@ -76,10 +77,13 @@ class EngineTenant:
     ``engine`` executes the (reduced) JAX model; ``plan`` is the
     compile-time artifact the scheduler reasons with (version tables,
     QoS slices, ``Avg_C``) — the same pairing the single-engine
-    ``OnlineRuntime`` uses, replicated per model."""
+    ``OnlineRuntime`` uses, replicated per model.  ``tier`` is the
+    tenant's SLO tier (core.qos.TIER_ORDER); a Workload's ``tiers`` map
+    overrides it per serve, and None means untiered legacy behavior."""
     name: str
     engine: ServingEngine
     plan: ModelPlan
+    tier: str | None = None
 
 
 @dataclasses.dataclass
@@ -127,6 +131,7 @@ def build_cluster(archs: list[str], hw: cm.HardwareSpec, *,
                   batch_slots: int = 2, max_len: int = 32,
                   qos_scale: float = 3.0, seed: int = 0,
                   plans: dict[str, ModelPlan] | None = None,
+                  tiers: dict[str, str] | None = None,
                   ) -> list[EngineTenant]:
     """Stand up one reduced real engine per architecture.
 
@@ -148,7 +153,8 @@ def build_cluster(archs: list[str], hw: cm.HardwareSpec, *,
         engine = ServingEngine(cfg, params, batch_slots=batch_slots,
                                max_len=max_len,
                                version_sets=plans[arch].version_sets)
-        out.append(EngineTenant(name=arch, engine=engine, plan=plans[arch]))
+        out.append(EngineTenant(name=arch, engine=engine, plan=plans[arch],
+                                tier=(tiers or {}).get(arch)))
     return out
 
 
@@ -165,9 +171,15 @@ class ClusterRuntime:
     def __init__(self, tenants: list[EngineTenant], policy: Policy,
                  hw: cm.HardwareSpec, *, step_dt: float = 1e-3,
                  wall_clock: bool = False, max_steps: int = 200_000,
-                 seed: int = 0, fused: bool = True):
+                 seed: int = 0, fused: bool = True,
+                 scheduler: str = "slo",
+                 admission: AdmissionController | None = None,
+                 tiers: dict[str, TierSpec] | None = None):
         if len({t.name for t in tenants}) != len(tenants):
             raise ValueError("tenant names must be unique")
+        if scheduler not in ("slo", "fifo"):
+            raise ValueError(f"scheduler must be 'slo' or 'fifo', "
+                             f"got {scheduler!r}")
         self.tenants = list(tenants)
         self.policy = policy
         self.hw = hw
@@ -175,10 +187,21 @@ class ClusterRuntime:
         self.wall_clock = wall_clock
         self.max_steps = max_steps
         self.fused = fused
+        self.scheduler = scheduler
+        self.admission = admission       # None = admit everything (legacy)
+        self.book = DeadlineBook(tiers)
         self.pool = UnitPool(hw.n_units)
         self.ticks = 0
         self.conflicts = 0               # admission rejections (engine full)
         self.tenant_conflicts = {t.name: 0 for t in self.tenants}
+        self.shed = 0                    # rejected by admission control
+        self.deferred = 0                # admissions delayed by it
+        self.tenant_shed = {t.name: 0 for t in self.tenants}
+        self.tenant_deferred = {t.name: 0 for t in self.tenants}
+        self.sched_trace: list[tuple] = []  # (tenant, "prefill", rid,
+                                            #  tier, t) |
+                                            # (tenant, "decode", (rids...), t)
+        self.outputs: dict[int, list[int]] = {}   # rid -> served tokens
         self.compile_time_s = 0.0        # wall time inside level switches
         self.partition_trace: list[dict[str, int]] = []
         self._rng = np.random.default_rng(seed)
@@ -298,7 +321,17 @@ class ClusterRuntime:
             in enumerate(sorted(wl.arrivals)))
         meta: dict[int, tuple[str, float, float]] = {}
         rejected: set[int] = set()
+        deferred_rids: set[int] = set()
+        by_tenant_name = {t.name: t for t in self.tenants}
         now = 0.0
+
+        def tier_of(name: str) -> str | None:
+            # the workload's tiers map wins; the tenant's own tier is the
+            # standing assignment; None = untiered legacy
+            wt = wl.tier_of(name)
+            return wt if wt is not None else by_tenant_name[name].tier
+
+        tiered = any(tier_of(t.name) is not None for t in self.tenants)
 
         def admit(t: EngineTenant) -> None:
             st = self._state[t.name]
@@ -306,7 +339,32 @@ class ClusterRuntime:
                 at, rid = st.pending[0]
                 req = Request(rid=rid,
                               prompt=prompts[t.name][rid, :lens[rid]],
-                              max_new_tokens=wl.max_new_tokens)
+                              max_new_tokens=wl.max_new_tokens,
+                              tier=tier_of(t.name))
+                if self.scheduler == "slo" and self.admission is not None:
+                    entry = self.book.entry(rid)
+                    decision = self.admission.decide(
+                        now=now, entry=entry,
+                        spec=self.book.spec(entry.tier),
+                        step_dt=self.step_dt,
+                        own_chunks=len(
+                            t.engine._prefill_schedule(lens[rid])),
+                        own_decode_steps=wl.max_new_tokens,
+                        backlog_chunks=sum(
+                            c for _, _, c in t.engine.prefill_queue()),
+                        slot_free=t.engine.active_slots < t.engine.slots)
+                    if decision == "shed":
+                        self.shed += 1
+                        self.tenant_shed[t.name] += 1
+                        self.book.drop(rid)
+                        st.pending.popleft()
+                        continue
+                    if decision == "defer":
+                        if rid not in deferred_rids:
+                            deferred_rids.add(rid)
+                            self.deferred += 1
+                            self.tenant_deferred[t.name] += 1
+                        break
                 try:
                     admitted = t.engine.admit_request(req)
                 except ValueError:
@@ -331,6 +389,16 @@ class ClusterRuntime:
                       if r is not None]
             st.oldest_admit = min(active) if active else now
 
+        def tenant_deadline(name: str) -> float:
+            """Earliest deadline across a tenant's in-flight and pending
+            requests — the slack key grants are ordered by when tiered."""
+            t = by_tenant_name[name]
+            rids = [r.rid for r in t.engine.slot_req if r is not None]
+            rids += [rid for _, rid in self._state[name].pending]
+            dls = [self.book.entry(r).deadline for r in rids
+                   if self.book.get(r) is not None]
+            return min(dls) if dls else float("inf")
+
         while arrivals or any(self._state[t.name].pending
                               or t.engine.active_slots
                               for t in self.tenants):
@@ -338,6 +406,8 @@ class ClusterRuntime:
                 break
             while arrivals and arrivals[0][0] <= now:
                 at, name, rid = arrivals.popleft()
+                self.book.register(rid, name, tier_of(name), at,
+                                   by_name[name].plan.qos_s)
                 self._state[name].pending.append((at, rid))
             for t in self.tenants:
                 admit(t)
@@ -361,7 +431,16 @@ class ClusterRuntime:
                             if t.engine.active_slots]
             need = [task for task in active_tasks
                     if self._state[task.tenant].grant == 0]
-            for task in self.policy.order_pending(need, now):
+            if self.scheduler == "slo" and tiered:
+                # tiered serve: grants go out in earliest-deadline order
+                # (the engine whose tightest query has least slack plans
+                # first, so it gets units before the pool runs dry)
+                ordered = sorted(
+                    need, key=lambda task: (tenant_deadline(task.tenant),
+                                            task.arrival, task.tid))
+            else:
+                ordered = self.policy.order_pending(need, now)
+            for task in ordered:
                 self._replan(task.tid, self.tenants[task.tid],
                              active_tasks, demands, now)
 
@@ -388,24 +467,47 @@ class ClusterRuntime:
                     # pending); time still advances below, so the next tick
                     # re-plans instead of spinning
                     continue
-                # per-engine prefill/decode alternation: an engine with a
-                # prompt mid-prefill spends every other quantum (or every
-                # quantum, if nothing is decodable) on one prefill chunk,
-                # so admissions are metered without starving its decodes
-                do_prefill = t.engine.should_prefill(st.prefill_last)
-                st.prefill_last = do_prefill
+                # per-engine prefill/decode pick.  FIFO: strict
+                # alternation — an engine with a prompt mid-prefill
+                # spends every other quantum (or every quantum, if
+                # nothing is decodable) on one prefill chunk, so
+                # admissions are metered without starving its decodes.
+                # SLO: earliest-deadline pick over the engine's prefill
+                # queue and decode backlog (TTFT-urgent chunks preempt).
+                pf_slot = None
+                k_dispatch = q_tick
+                if self.scheduler == "slo":
+                    pick = pick_quantum(t.engine, self.book, now,
+                                        self.step_dt, max(q_tick, 1))
+                    do_prefill = pick is not None and pick[0] == "prefill"
+                    if do_prefill:
+                        pf_slot = pick[1]
+                    elif pick is not None:
+                        k_dispatch = min(q_tick, pick[1]) or 1
+                else:
+                    do_prefill = t.engine.should_prefill(st.prefill_last)
+                    st.prefill_last = do_prefill
                 if do_prefill:
                     occupancy = 1.0 / t.engine.slots   # the prefilling row
-                    pf = t.engine.prefill_step()
+                    pf = t.engine.prefill_step(pf_slot)
                     st.prefill_quanta += 1
+                    if pf is not None:
+                        e = self.book.get(pf.rid)
+                        self.sched_trace.append(
+                            (t.name, "prefill", pf.rid,
+                             e.tier if e is not None else None, now))
                     launched.append((t, st, None, occupancy, pf))
                     continue
                 # decode occupancy: slots still mid-prefill are skipped by
                 # the decode quantum and must not be charged as busy
                 occupancy = (t.engine.active_slots
                              - t.engine.prefill_pending) / t.engine.slots
-                handle = (t.engine.begin_quantum(q_tick)
+                handle = (t.engine.begin_quantum(k_dispatch)
                           if self.fused else None)
+                if handle is not None:
+                    self.sched_trace.append((t.name, "decode", tuple(
+                        t.engine.slot_req[i].rid for i in handle.active),
+                        now))
                 launched.append((t, st, handle, occupancy, None))
 
             # collect phase: one host sync per engine per quantum
@@ -467,10 +569,18 @@ class ClusterRuntime:
                 _, at, _ = meta[req.rid]
                 st = self._state[name]
                 fin = now if self.wall_clock else t_begin + off * self.step_dt
+                entry = self.book.get(req.rid)
+                has_tier = tier_of(name) is not None
                 st.records.append(QueryRecord(
                     tenant=name, arrival=at, finish=fin,
                     qos_s=by_name[name].plan.qos_s,
-                    ttft_s=st.ttft.get(req.rid)))
+                    ttft_s=st.ttft.get(req.rid),
+                    tier=(entry.tier if has_tier and entry is not None
+                          else "standard"),
+                    deadline=(entry.deadline
+                              if has_tier and entry is not None else None)))
+                self.outputs[req.rid] = list(req.output)
+                self.book.drop(req.rid)
 
         for t in self.tenants:               # return whatever is still held
             self._release(self._state[t.name])
@@ -485,13 +595,16 @@ class ClusterRuntime:
             per_tenant[t.name] = summarize(
                 st.records, n_t / span,
                 self.tenant_conflicts[t.name] / max(n_t, 1),
-                st.busy, st.alloc)
+                st.busy, st.alloc,
+                shed=self.tenant_shed[t.name],
+                deferred=self.tenant_deferred[t.name])
             all_records.extend(st.records)
             busy += st.busy
             alloc += st.alloc
         aggregate = summarize(all_records, wl.qps,
                               self.conflicts / max(wl.n_queries, 1),
-                              busy, alloc)
+                              busy, alloc,
+                              shed=self.shed, deferred=self.deferred)
         return ClusterMetrics(
             aggregate=aggregate, per_tenant=per_tenant,
             level_traces={t.name: list(self._state[t.name].levels)

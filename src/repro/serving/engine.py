@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +84,9 @@ class Request:
     max_new_tokens: int = 16
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    tier: str | None = None       # SLO tier (core.qos.TIER_ORDER); None =
+                                  # untiered legacy request (standard urgency,
+                                  # legacy qos_s-relative satisfaction)
 
 
 @dataclasses.dataclass
@@ -343,10 +347,13 @@ class ServingEngine:
             rem -= b // 2
         return out
 
-    def admit_request(self, req: Request) -> bool:
+    def admit_request(self, req: Request, *, drain: bool = False) -> bool:
         """Reserve a slot for ``req`` and queue its prefill chunks WITHOUT
         executing them — callers meter prefill by pumping
         :meth:`prefill_step` (runtimes interleave it with decode quanta).
+        ``drain=True`` additionally pumps queued chunks (FIFO) until this
+        request's first token is out — the synchronous convenience path
+        for tests/examples (the old ``add_request``).
 
         Returns False when no slot is free (retry later).  Raises
         ``ValueError`` for prompts the cache row cannot hold — empty, or
@@ -371,6 +378,9 @@ class ServingEngine:
             self._prefill[slot] = _PrefillState(
                 req=req, row_cache=self._empty_row,
                 schedule=self._prefill_schedule(n))
+            if drain:
+                while not req.output:
+                    self.prefill_step()
             return True
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         logits, row_cache = self._prefill_one(self.params, toks,
@@ -395,6 +405,26 @@ class ServingEngine:
         return any(r is not None and i not in self._prefill
                    for i, r in enumerate(self.slot_req))
 
+    def prefill_queue(self) -> list[tuple[int, int, int]]:
+        """Slots mid-prefill, FIFO order: (slot, rid, chunks_left).  The
+        SLO scheduler's view of the prefill backlog — it picks the slot
+        whose TTFT deadline is tightest instead of the oldest one."""
+        return [(slot, st.req.rid, len(st.schedule))
+                for slot, st in self._prefill.items()]
+
+    def decode_backlog(self) -> list[tuple[int, int, int]]:
+        """Decodable slots: (slot, rid, tokens_left).  ``tokens_left`` is
+        the remaining decode budget (the SRPT/slack estimate the SLO
+        scheduler sizes decode quanta from)."""
+        out = []
+        for i, req in enumerate(self.slot_req):
+            if req is None or i in self._prefill:
+                continue
+            need = req.max_new_tokens + 1 - len(req.output)
+            room = self.max_len - 1 - int(self.slot_pos[i])
+            out.append((i, req.rid, max(1, min(need, room))))
+        return out
+
     def should_prefill(self, last_was_prefill: bool) -> bool:
         """Strict prefill/decode alternation (shared by both runtimes):
         spend this quantum on a prefill chunk when a prompt is
@@ -405,9 +435,11 @@ class ServingEngine:
         return bool(self._prefill) and (not self.decode_ready
                                         or not last_was_prefill)
 
-    def prefill_step(self) -> PrefillQuantum | None:
+    def prefill_step(self, slot: int | None = None) -> PrefillQuantum | None:
         """Run ONE prefill chunk — the prefill-side dispatch quantum —
-        for the oldest slot still prefilling (FIFO).
+        for ``slot``, or for the oldest slot still prefilling (FIFO)
+        when ``slot`` is None.  SLO schedulers pass the slot whose TTFT
+        deadline is tightest; FIFO callers pass nothing.
 
         The chunk prefills into the slot's accumulating batch-1 row cache
         at its start-position offset; only the final chunk pays a
@@ -416,7 +448,10 @@ class ServingEngine:
         ran, or None when nothing is prefilling."""
         if not self._prefill:
             return None
-        slot, st = next(iter(self._prefill.items()))
+        if slot is None:
+            slot, st = next(iter(self._prefill.items()))
+        else:
+            st = self._prefill[slot]
         c = st.schedule.popleft()
         n = len(st.req.prompt)
         valid = min(c, n - st.done)
@@ -442,65 +477,48 @@ class ServingEngine:
                               tokens=valid, finished=finished)
 
     def add_request(self, req: Request) -> bool:
-        """Admit a request and run its whole prefill synchronously (the
-        convenience path for tests/examples; runtimes meter prefill as
-        scheduled quanta via :meth:`admit_request` + :meth:`prefill_step`).
+        """Deprecated alias for ``admit_request(req, drain=True)``.
 
         Chunked and monolithic admission produce token-identical
         requests; chunked just runs through the bucket table."""
-        if not self.admit_request(req):
-            return False
-        while not req.output:                   # drain (FIFO) to this req
-            self.prefill_step()
-        return True
+        warnings.warn(
+            "ServingEngine.add_request is deprecated; use "
+            "admit_request(req, drain=True) (or admit_request + "
+            "prefill_step to meter prefill as scheduled quanta)",
+            DeprecationWarning, stacklevel=2)
+        return self.admit_request(req, drain=True)
 
     def step(self) -> list[Request]:
         """One decode step for every active slot; returns finished reqs.
-        Slots still mid-prefill are not decodable and are skipped."""
-        active = [i for i, r in enumerate(self.slot_req)
-                  if r is not None and i not in self._prefill]
-        if not active:
-            return []
-        toks = np.zeros(self.slots, np.int32)
-        for i in active:
-            toks[i] = self.slot_req[i].output[-1]
-        # per-slot positions: each row decodes at its own absolute position
-        # and attends under its own kv-valid horizon, so mixed-length /
-        # staggered prompts stay exact (free slots compute garbage rows
-        # that the next admission's pristine-row prefill replaces)
-        logits, self.cache = self._decode(
-            self.params, {"tokens": jnp.asarray(toks)}, self.cache,
-            jnp.asarray(self.slot_pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
-        self.host_syncs += 1
-        self.tokens_decoded += len(active)
-        finished = []
-        for i in active:
-            req = self.slot_req[i]
-            req.output.append(int(nxt[i]))
-            self.slot_pos[i] += 1
-            if len(req.output) >= req.max_new_tokens + 1 or \
-                    self.slot_pos[i] >= self.max_len - 1:
-                req.done = True
-                finished.append(req)
-                self.slot_req[i] = None
-        return finished
+        Slots still mid-prefill are not decodable and are skipped.
+
+        Thin wrapper over the unified quantum path: a per-step dispatch
+        is a 1-step non-fused quantum (one sync, one token per row)."""
+        return self.finish_quantum(self.begin_quantum(1, fused=False))
 
     # ------------------------------------------------------------------
     # Fused dispatch quanta
     # ------------------------------------------------------------------
-    def begin_quantum(self, k: int) -> QuantumHandle | None:
-        """Dispatch up to ``k`` decode steps for every active slot as ONE
-        fused on-device executable, without syncing.
+    def begin_quantum(self, k: int, *,
+                      fused: bool = True) -> QuantumHandle | None:
+        """Dispatch up to ``k`` decode steps for every active slot,
+        without syncing.  This is THE decode entry point: :meth:`step`
+        and :meth:`step_quantum` are thin wrappers over it.
 
-        Per-row budgets (``n_left``) clamp each slot to its remaining
-        token/length allowance and to ``k``; rows past their budget freeze
-        on device (token, position and cache), so the result is
-        token-for-token identical to ``k`` sequential :meth:`step` calls.
-        The executed quantum is capped at the largest K-bucket — callers
-        dispatching bigger quanta issue further calls with the leftover
-        (one sync each).  Returns ``None`` when no slot is active (slots
-        still mid-prefill are not decodable)."""
+        With ``fused=True`` the quantum runs as ONE fused on-device
+        executable.  Per-row budgets (``n_left``) clamp each slot to its
+        remaining token/length allowance and to ``k``; rows past their
+        budget freeze on device (token, position and cache), so the
+        result is token-for-token identical to ``k`` sequential
+        :meth:`step` calls.  The executed quantum is capped at the
+        largest K-bucket — callers dispatching bigger quanta issue
+        further calls with the leftover (one sync each).
+
+        With ``fused=False`` one plain decode step is dispatched (``k``
+        is ignored beyond being positive) — the per-step reference path,
+        kept on the same handle protocol so both modes do identical
+        bookkeeping in :meth:`finish_quantum`.  Returns ``None`` when no
+        slot is active (slots still mid-prefill are not decodable)."""
         active = [i for i, r in enumerate(self.slot_req)
                   if r is not None and i not in self._prefill]
         if not active or k <= 0:
@@ -517,6 +535,18 @@ class ServingEngine:
             # limit) finishing instead of spinning with a zero budget
             n_left[i] = max(1, min(need, room))
             toks[i] = req.output[-1]
+        if not fused:
+            # per-slot positions: each row decodes at its own absolute
+            # position and attends under its own kv-valid horizon, so
+            # mixed-length / staggered prompts stay exact (free slots
+            # compute garbage rows that the next admission's pristine-row
+            # prefill replaces)
+            logits, self.cache = self._decode(
+                self.params, {"tokens": jnp.asarray(toks)}, self.cache,
+                jnp.asarray(self.slot_pos))
+            n_left = np.minimum(n_left, 1)
+            return QuantumHandle(block=jnp.argmax(logits, axis=-1)[None],
+                                 n_left=n_left, steps=1, active=active)
         steps = int(min(int(k), int(n_left.max()),
                         self.quantum_buckets[-1]))
         bucket = next(b for b in self.quantum_buckets if b >= steps)
@@ -562,16 +592,23 @@ class ServingEngine:
         return self.finish_quantum(self.begin_quantum(k))
 
     def run_to_completion(self, reqs: list[Request],
-                          max_steps: int = 10_000) -> list[Request]:
+                          max_steps: int = 10_000, *,
+                          fused: bool = True) -> list[Request]:
+        """Serve ``reqs`` to completion.  Decode runs on the fused
+        quantum path by default (largest warmed K-bucket per dispatch,
+        one sync each); ``fused=False`` keeps the per-token reference
+        loop.  Both produce identical token streams."""
         pending = collections.deque(reqs)
         done: list[Request] = []
+        k = self.quantum_buckets[-1] if fused else 1
         steps = 0
         while (pending or any(r is not None for r in self.slot_req)) \
                 and steps < max_steps:
-            while pending and self.add_request(pending[0]):
+            while pending and self.admit_request(pending[0]):
                 pending.popleft()
-            while self._prefill:        # slots admitted via admit_request
+            while self._prefill:        # drain queued chunks before decode
                 self.prefill_step()
-            done.extend(self.step())
+            done.extend(self.finish_quantum(self.begin_quantum(
+                k, fused=fused)))
             steps += 1
         return done

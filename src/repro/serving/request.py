@@ -33,6 +33,77 @@ def uniform_workload(model: str, qps: float,
     return [(i * gap, model) for i in range(n_queries)]
 
 
+def _pick_models(rng: np.random.Generator, models: list[str], n: int,
+                 weights: list[float] | None) -> np.ndarray:
+    if weights is None:
+        probs = np.ones(len(models)) / len(models)
+    else:
+        w = np.asarray(weights, dtype=float)
+        probs = w / w.sum()
+    return rng.choice(models, size=n, p=probs)
+
+
+def gamma_poisson_workload(models: list[str], qps: float, n_queries: int,
+                           *, burstiness: float = 1.0,
+                           interval_s: float = 0.05, seed: int = 0,
+                           weights: list[float] | None = None,
+                           ) -> list[tuple[float, str]]:
+    """Doubly-stochastic (Gamma-modulated) Poisson arrivals — the bursty
+    heavy-traffic regime the paper targets.
+
+    The instantaneous rate is ``qps * m_i`` where the per-interval
+    multiplier ``m_i ~ Gamma(shape=1/burstiness, scale=burstiness)``
+    (mean 1, variance = burstiness), redrawn every ``interval_s``
+    seconds: ``burstiness -> 0`` recovers plain Poisson at rate ``qps``;
+    large values pile arrivals into flash crowds separated by lulls.
+    Mean offered load stays ``qps`` so bursty and smooth workloads are
+    comparable at equal offered load."""
+    if burstiness < 0:
+        raise ValueError("burstiness must be >= 0")
+    rng = np.random.default_rng(seed)
+    times = []
+    t = 0.0
+    while len(times) < n_queries:
+        if burstiness < 1e-9:
+            mult = 1.0
+        else:
+            mult = float(rng.gamma(1.0 / burstiness, burstiness))
+        rate = qps * mult
+        end = t + interval_s
+        if rate > 1e-12:
+            while True:
+                t += float(rng.exponential(1.0 / rate))
+                if t >= end or len(times) >= n_queries:
+                    break
+                times.append(t)
+        t = end
+    names = _pick_models(rng, models, n_queries, weights)
+    return list(zip(times[:n_queries], names.tolist()))
+
+
+def diurnal_workload(models: list[str], qps_peak: float, n_queries: int,
+                     *, period_s: float = 1.0, floor: float = 0.2,
+                     seed: int = 0, weights: list[float] | None = None,
+                     ) -> list[tuple[float, str]]:
+    """Sinusoidally-modulated Poisson arrivals (a compressed diurnal
+    cycle) via Lewis thinning: rate(t) = qps_peak * (floor + (1-floor)
+    * (1 + sin(2*pi*t/period_s)) / 2), so load swings between
+    ``floor*qps_peak`` and ``qps_peak`` every ``period_s`` seconds."""
+    if not 0.0 <= floor <= 1.0:
+        raise ValueError("floor must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    times = []
+    t = 0.0
+    while len(times) < n_queries:
+        t += float(rng.exponential(1.0 / qps_peak))
+        rate_frac = floor + (1.0 - floor) \
+            * (1.0 + np.sin(2.0 * np.pi * t / period_s)) / 2.0
+        if rng.random() < rate_frac:        # Lewis-Shedler thinning
+            times.append(t)
+    names = _pick_models(rng, models, n_queries, weights)
+    return list(zip(times, names.tolist()))
+
+
 def qos_inverse_weights(qos_ms: dict[str, float]) -> list[float]:
     return [1.0 / qos_ms[m] for m in qos_ms]
 

@@ -36,11 +36,13 @@ import time
 from repro.core import cost_model as cm
 from repro.core.interference import RunningDemand, read_counters
 from repro.core.layer_block import ModelPlan
-from repro.core.qos import QueryRecord, ServingMetrics, summarize
+from repro.core.qos import QueryRecord, ServingMetrics, TierSpec, summarize
 from repro.core.scheduler import Policy, TaskState
 from repro.serving.engine import Request, ServingEngine
-from repro.serving.request import poisson_workload, synth_prompts
+from repro.serving.request import (diurnal_workload, gamma_poisson_workload,
+                                   poisson_workload, synth_prompts)
 from repro.serving.simulator import SimConfig, Simulator
+from repro.serving.slo import AdmissionController, DeadlineBook, pick_quantum
 
 
 @dataclasses.dataclass
@@ -55,10 +57,19 @@ class Workload:
     max_new_tokens: int = 4
     seed: int = 0
     prompt_len_spread: int = 0             # mixed-length prompts when > 0
+    tiers: dict[str, str] | None = None    # tenant -> SLO tier name; None =
+                                           # untiered legacy workload
 
     @property
     def n_queries(self) -> int:
         return len(self.arrivals)
+
+    def tier_of(self, tenant: str) -> str | None:
+        """The tenant's SLO tier, or None for untiered workloads (legacy
+        qos_s-relative satisfaction, standard-tier urgency)."""
+        if self.tiers is None:
+            return None
+        return self.tiers.get(tenant)
 
     def prompt_lengths(self) -> list[int]:
         """Per-query prompt lengths (deterministic per seed)."""
@@ -86,6 +97,45 @@ class Workload:
         return Workload(arr, prompt_len=prompt_len,
                         max_new_tokens=max_new_tokens, seed=seed,
                         prompt_len_spread=prompt_len_spread)
+
+    @staticmethod
+    def bursty(tenants: list[str], qps: float, n_queries: int, *,
+               burstiness: float = 4.0, interval_s: float = 0.05,
+               prompt_len: int = 8, max_new_tokens: int = 4, seed: int = 0,
+               weights: list[float] | None = None,
+               prompt_len_spread: int = 0,
+               tiers: dict[str, str] | None = None) -> "Workload":
+        """Gamma-modulated Poisson arrivals (flash crowds at mean ``qps``
+        offered load) — the heavy-traffic regime the paper targets."""
+        arr = gamma_poisson_workload(tenants, qps, n_queries,
+                                     burstiness=burstiness,
+                                     interval_s=interval_s, seed=seed,
+                                     weights=weights)
+        return Workload(arr, prompt_len=prompt_len,
+                        max_new_tokens=max_new_tokens, seed=seed,
+                        prompt_len_spread=prompt_len_spread, tiers=tiers)
+
+    @staticmethod
+    def diurnal(tenants: list[str], qps_peak: float, n_queries: int, *,
+                period_s: float = 1.0, floor: float = 0.2,
+                prompt_len: int = 8, max_new_tokens: int = 4, seed: int = 0,
+                weights: list[float] | None = None,
+                prompt_len_spread: int = 0,
+                tiers: dict[str, str] | None = None) -> "Workload":
+        """Sinusoidally-modulated arrivals (compressed diurnal cycle)."""
+        arr = diurnal_workload(tenants, qps_peak, n_queries,
+                               period_s=period_s, floor=floor, seed=seed,
+                               weights=weights)
+        return Workload(arr, prompt_len=prompt_len,
+                        max_new_tokens=max_new_tokens, seed=seed,
+                        prompt_len_spread=prompt_len_spread, tiers=tiers)
+
+    @staticmethod
+    def replay(arrivals: list[tuple[float, str]], **kw) -> "Workload":
+        """Trace replay: a recorded (time, tenant) stream — sorted here so
+        captured traces need no preprocessing — with the request shapes
+        supplied as keywords (scales to thousands of requests)."""
+        return Workload(sorted(arrivals), **kw)
 
 
 def replay_through_simulator(wl: Workload, hw: cm.HardwareSpec,
@@ -136,13 +186,30 @@ class OnlineRuntime:
     prompt stalls co-resident decodes for at most one chunk, and TTFT
     (``QueryRecord.ttft_s`` / ``ServingMetrics.avg_ttft_s``) is real
     virtual time, not zero.  Inadmissible prompts (``len >= max_len``)
-    are rejected at admission and counted as conflicts."""
+    are rejected at admission and counted as conflicts.
+
+    Scheduling (``scheduler=``): ``"slo"`` (default) picks every quantum
+    by earliest deadline over the prefill queue and decode backlog
+    (serving.slo.pick_quantum) — TTFT-urgent prefill chunks preempt
+    decode quanta, batch-tier decodes yield — and admissions go in
+    earliest-deadline order through the optional
+    :class:`~repro.serving.slo.AdmissionController` (shed/defer counted
+    in ``ServingMetrics.shed_queries``/``deferred_queries``).  ``"fifo"``
+    keeps the legacy strict prefill/decode alternation and
+    arrival-order admission.  Both orderings retire every request with
+    identical per-request token streams — scheduling reorders quanta,
+    never changes what a row computes."""
 
     def __init__(self, engine: ServingEngine, policy: Policy,
                  plans: dict[str, ModelPlan], hw: cm.HardwareSpec, *,
                  step_dt: float = 1e-3, wall_clock: bool = False,
                  max_steps: int = 200_000, seed: int = 0,
-                 fused: bool = True):
+                 fused: bool = True, scheduler: str = "slo",
+                 admission: AdmissionController | None = None,
+                 tiers: dict[str, TierSpec] | None = None):
+        if scheduler not in ("slo", "fifo"):
+            raise ValueError(f"scheduler must be 'slo' or 'fifo', "
+                             f"got {scheduler!r}")
         self.engine = engine
         self.policy = policy
         self.plans = plans
@@ -151,13 +218,21 @@ class OnlineRuntime:
         self.wall_clock = wall_clock
         self.max_steps = max_steps
         self.fused = fused
+        self.scheduler = scheduler
+        self.admission = admission       # None = admit everything (legacy)
+        self.book = DeadlineBook(tiers)
         import numpy as np
         self._rng = np.random.default_rng(seed)   # counter-read noise
         self.records: list[QueryRecord] = []
         self.level_trace: list[float] = []
+        self.sched_trace: list[tuple] = []  # ("prefill", rid, tier, t) |
+                                            # ("decode", (rids...), t)
+        self.outputs: dict[int, list[int]] = {}  # rid -> served tokens
         self.conflicts = 0
+        self.shed = 0                    # rejected by admission control
+        self.deferred = 0                # admissions delayed past arrival
         self.steps = 0
-        self.quanta = 0                  # fused dispatch quanta issued
+        self.quanta = 0                  # decode dispatch quanta issued
         self.prefill_quanta = 0          # prefill-chunk quanta issued
         self._prefill_last = False       # prefill/decode alternation state
         self._ttft: dict[int, float] = {}   # rid -> time to first token
@@ -227,6 +302,72 @@ class OnlineRuntime:
                                      finish=max(horizon, now + self.step_dt)))
         return out
 
+    def _admission_pass(self, pending: list, wl: Workload, prompts, lens,
+                        meta: dict, rejected: set, deferred_rids: set,
+                        shed_rids: set, now: float) -> None:
+        """Admit due requests into free slots.  FIFO mode walks the queue
+        in arrival order and stops at the first full-engine failure
+        (legacy).  SLO mode walks it in earliest-deadline order —
+        an urgent late arrival jumps the queue — and consults the
+        admission controller, which may shed (drop + count) or defer
+        (skip this pass + count) a request before QoS collapses."""
+        if self.scheduler == "slo":
+            order = sorted(pending,
+                           key=lambda p: (self.book.entry(p[2]).deadline,
+                                          p[0], p[2]))
+        else:
+            order = list(pending)
+        for t, tenant, rid in order:
+            req = Request(rid=rid, prompt=prompts[rid, :lens[rid]],
+                          max_new_tokens=wl.max_new_tokens,
+                          tier=wl.tier_of(tenant))
+            if self.scheduler == "slo" and self.admission is not None:
+                entry = self.book.entry(rid)
+                decision = self.admission.decide(
+                    now=now, entry=entry, spec=self.book.spec(entry.tier),
+                    step_dt=self.step_dt,
+                    own_chunks=len(self.engine._prefill_schedule(lens[rid])),
+                    own_decode_steps=wl.max_new_tokens,
+                    backlog_chunks=sum(
+                        c for _, _, c in self.engine.prefill_queue()),
+                    slot_free=self.engine.active_slots < self.engine.slots)
+                if decision == "shed":
+                    self.shed += 1
+                    shed_rids.add(rid)
+                    pending.remove((t, tenant, rid))
+                    self.book.drop(rid)
+                    continue
+                if decision == "defer":
+                    if rid not in deferred_rids:
+                        deferred_rids.add(rid)
+                        self.deferred += 1
+                    if self.engine.active_slots >= self.engine.slots:
+                        break            # nothing can admit this pass
+                    continue
+            try:
+                admitted = self.engine.admit_request(req)
+            except ValueError:
+                # inadmissible prompt (len >= max_len would corrupt the
+                # cache row): a hard conflict — count once and drop,
+                # never retry
+                if rid not in rejected:
+                    rejected.add(rid)
+                    self.conflicts += 1
+                pending.remove((t, tenant, rid))
+                self.book.drop(rid)
+                continue
+            if not admitted:
+                # engine full: a QoS conflict in the paper's sense,
+                # counted once per query at its first failed admission
+                if rid not in rejected:
+                    rejected.add(rid)
+                    self.conflicts += 1
+                break
+            meta[rid] = (tenant, t, now)
+            if req.output:               # monolithic engines prefill
+                self._ttft[rid] = now - t   # inside admit_request
+            pending.remove((t, tenant, rid))
+
     def serve(self, wl: Workload) -> ServingMetrics:
         """Replay ``wl`` through the engine; returns ServingMetrics over
         the same records layout the simulator produces."""
@@ -236,9 +377,11 @@ class OnlineRuntime:
         arrivals = collections.deque(
             (t, tenant, rid) for rid, (t, tenant)
             in enumerate(sorted(wl.arrivals)))
-        pending: collections.deque = collections.deque()
+        pending: list = []
         meta: dict[int, tuple[str, float, float]] = {}
         rejected: set[int] = set()
+        deferred_rids: set[int] = set()
+        shed_rids: set[int] = set()
         now = 0.0
         busy = alloc = 0.0
 
@@ -247,33 +390,12 @@ class OnlineRuntime:
             if self.steps >= self.max_steps:
                 break
             while arrivals and arrivals[0][0] <= now:
-                pending.append(arrivals.popleft())
-            while pending:
-                t, tenant, rid = pending[0]
-                req = Request(rid=rid, prompt=prompts[rid, :lens[rid]],
-                              max_new_tokens=wl.max_new_tokens)
-                try:
-                    admitted = self.engine.admit_request(req)
-                except ValueError:
-                    # inadmissible prompt (len >= max_len would corrupt
-                    # the cache row): a hard conflict — count once and
-                    # drop, never retry
-                    if rid not in rejected:
-                        rejected.add(rid)
-                        self.conflicts += 1
-                    pending.popleft()
-                    continue
-                if not admitted:
-                    # engine full: a QoS conflict in the paper's sense,
-                    # counted once per query at its first failed admission
-                    if rid not in rejected:
-                        rejected.add(rid)
-                        self.conflicts += 1
-                    break
-                meta[rid] = (tenant, t, now)
-                if req.output:               # monolithic engines prefill
-                    self._ttft[rid] = now - t   # inside admit_request
-                pending.popleft()
+                t, tenant, rid = arrivals.popleft()
+                self.book.register(rid, tenant, wl.tier_of(tenant), t,
+                                   self.plans[tenant].qos_s)
+                pending.append((t, tenant, rid))
+            self._admission_pass(pending, wl, prompts, lens, meta,
+                                 rejected, deferred_rids, shed_rids, now)
             n_active = self.engine.active_slots
             if n_active == 0:
                 if arrivals:                 # idle: jump to next arrival
@@ -296,22 +418,46 @@ class OnlineRuntime:
             self.compile_time_s += time.perf_counter() - t0
             self.level_trace.append(level)
 
-            # prefill chunks and decode quanta strictly alternate while
-            # both have work: a long prompt never stalls co-resident
-            # decodes for more than one chunk (the granularity claim,
-            # applied to the admission path)
-            do_prefill = self.engine.should_prefill(self._prefill_last)
-            self._prefill_last = do_prefill
+            # quantum pick.  FIFO mode: prefill chunks and decode quanta
+            # strictly alternate while both have work — a long prompt
+            # never stalls co-resident decodes for more than one chunk
+            # (the granularity claim, applied to the admission path).
+            # SLO mode: earliest-deadline order over both queues — a
+            # TTFT-urgent prefill chunk preempts decode quanta, batch-
+            # tier decodes yield, and a decode quantum's length is
+            # capped by the tightest pending TTFT deadline.
+            k_cap = self._plan_quantum(meta, sample, now) if self.fused \
+                else 1
+            pf_slot = None
+            if self.scheduler == "slo":
+                pick = pick_quantum(self.engine, self.book, now,
+                                    self.step_dt, k_cap)
+                do_prefill = pick is not None and pick[0] == "prefill"
+                if do_prefill:
+                    pf_slot = pick[1]
+                elif pick is not None:
+                    k_cap = pick[1]
+            else:
+                do_prefill = self.engine.should_prefill(self._prefill_last)
+                self._prefill_last = do_prefill
             handle = None
             finished: list = []
             pf = None
             if do_prefill:
-                pf = self.engine.prefill_step()
+                pf = self.engine.prefill_step(pf_slot)
                 steps_run = 1
                 self.prefill_quanta += 1
+                if pf is not None:
+                    tier = self.book.get(pf.rid)
+                    self.sched_trace.append(
+                        ("prefill", pf.rid,
+                         tier.tier if tier is not None else None, now))
             elif self.fused:
-                q = self._plan_quantum(meta, sample, now)
-                handle = self.engine.begin_quantum(q)
+                handle = self.engine.begin_quantum(k_cap)
+                if handle is not None:
+                    self.sched_trace.append(("decode", tuple(
+                        self.engine.slot_req[i].rid
+                        for i in handle.active), now))
                 finished = self.engine.finish_quantum(handle)
                 steps_run = handle.steps if handle is not None else 1
                 if handle is not None:
@@ -319,8 +465,16 @@ class OnlineRuntime:
                         % self._cursor_n
                 self.quanta += 1
             else:
-                finished = self.engine.step()
+                handle = self.engine.begin_quantum(1, fused=False)
+                if handle is not None:
+                    self.sched_trace.append(("decode", tuple(
+                        self.engine.slot_req[i].rid
+                        for i in handle.active), now))
+                finished = self.engine.finish_quantum(handle)
+                handle = None           # per-step: legacy time accounting
                 steps_run = 1
+                self.quanta += 1        # a per-step dispatch is a 1-step
+                                        # quantum (comparable records)
             dt = (time.perf_counter() - t0) if self.wall_clock \
                 else self.step_dt * steps_run
             self.steps += steps_run
@@ -342,10 +496,19 @@ class OnlineRuntime:
                 fin = now
                 if handle is not None and not self.wall_clock:
                     fin = t_begin + handle.row_steps[req.rid] * self.step_dt
+                entry = self.book.get(req.rid)
+                tiered = wl.tier_of(tenant) is not None
                 self.records.append(QueryRecord(
                     tenant=tenant, arrival=arrival, finish=fin,
                     qos_s=self.plans[tenant].qos_s,
-                    ttft_s=self._ttft.get(req.rid)))
+                    ttft_s=self._ttft.get(req.rid),
+                    tier=(entry.tier if tiered and entry is not None
+                          else "standard"),
+                    deadline=(entry.deadline if tiered and entry is not None
+                              else None)))
+                self.outputs[req.rid] = list(req.output)
+                self.book.drop(req.rid)
 
         return summarize(self.records, wl.qps,
-                         self.conflicts / max(wl.n_queries, 1), busy, alloc)
+                         self.conflicts / max(wl.n_queries, 1), busy, alloc,
+                         shed=self.shed, deferred=self.deferred)

@@ -58,9 +58,9 @@ def _staggered_run(cfg, params, prompts):
     engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=N_NEW)
             for i, p in enumerate(prompts)]
-    assert engine.add_request(reqs[0])
+    assert engine.admit_request(reqs[0], drain=True)
     engine.step()                          # slot 0 is one token ahead
-    assert engine.add_request(reqs[1])     # different length, later join
+    assert engine.admit_request(reqs[1], drain=True)     # different length, later join
     engine.step()
     engine.step()
     engine.run_to_completion([reqs[2]])    # admitted after a slot frees
@@ -105,8 +105,8 @@ def test_full_level_sweep_after_warmup_zero_retraces(setup):
     vc = engine.version_cache
     traces0, misses0 = vc.traces, vc.misses
     switches0 = engine.level_switches
-    engine.add_request(Request(rid=0, prompt=prompts[0],
-                               max_new_tokens=64))
+    engine.admit_request(Request(rid=0, prompt=prompts[0],
+                               max_new_tokens=64), drain=True)
     for i in range(cm.NUM_LEVELS):
         engine.set_interference_level(cm.grid_point(i))
         engine.step()
@@ -129,8 +129,8 @@ def test_interpret_mode_flips_hit_distinct_version_entries(setup):
     vc = engine.version_cache
     assert len(vc) == 3                 # baseline {} + two tile tables
     traces0, misses0 = vc.traces, vc.misses
-    engine.add_request(Request(rid=0, prompt=prompts[0],
-                               max_new_tokens=64))
+    engine.admit_request(Request(rid=0, prompt=prompts[0],
+                               max_new_tokens=64), drain=True)
     for i in range(4):
         engine.set_interference_level(float(i % 2))
         engine.step()
@@ -161,7 +161,7 @@ def test_two_engines_do_not_invalidate_each_other(setup):
     eng_a = ServingEngine(cfg, params, batch_slots=1, max_len=MAX_LEN)
     eng_b = ServingEngine(cfg, params, batch_slots=1, max_len=MAX_LEN)
     req = Request(rid=0, prompt=prompts[0], max_new_tokens=N_NEW)
-    eng_a.add_request(req)
+    eng_a.admit_request(req, drain=True)
     eng_b.set_interference_level(1.0)      # B stomps the global table
     while not req.done:
         eng_a.step()

@@ -71,9 +71,9 @@ def _staggered(engine, prompts):
     reqs = [Request(rid=i, prompt=p, max_new_tokens=N_NEW)
             for i, p in enumerate(prompts)]
     pending = list(reqs)
-    assert engine.add_request(pending.pop(0))
+    assert engine.admit_request(pending.pop(0), drain=True)
     engine.step()
-    assert engine.add_request(pending.pop(0))
+    assert engine.admit_request(pending.pop(0), drain=True)
     engine.step()
     engine.step()
     engine.run_to_completion(pending)
@@ -235,11 +235,17 @@ def test_long_prompt_admission_advances_clock(models, plans):
 def test_prefill_chunks_interleave_with_decode(models, plans):
     """Two same-length prompts back to back: the first request's decode
     must complete while the second prompt is still prefilling — a long
-    admission no longer stalls a co-resident tenant's decode."""
+    admission no longer stalls a co-resident tenant's decode.
+
+    Pinned to the FIFO scheduler: strict prefill/decode alternation is
+    the mechanism under test.  The SLO scheduler deliberately makes a
+    different (deadline-driven) choice here — its preemption ordering is
+    covered by tests/test_slo_scheduling.py."""
     cfg, _, params = models["gemma-2b"]
     engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN,
                            prefill_chunk_len=4)
-    runtime = OnlineRuntime(engine, FixedBlockPolicy(HW, 1), plans, HW)
+    runtime = OnlineRuntime(engine, FixedBlockPolicy(HW, 1), plans, HW,
+                            scheduler="fifo")
     wl = Workload([(0.0, "resnet50"), (0.0, "resnet50")],
                   prompt_len=12, max_new_tokens=2)
     runtime.serve(wl)

@@ -77,7 +77,7 @@ def _run_schedule(cfg, params, prompts, *, fused):
     pending = list(reqs)
     for k, level, admit in SCHEDULE:
         if admit and pending:
-            if engine.add_request(pending[0]):
+            if engine.admit_request(pending[0], drain=True):
                 pending.pop(0)
         engine.set_interference_level(level)
         if fused:
@@ -111,8 +111,8 @@ def test_exactly_one_host_sync_per_quantum(setup):
     cfg, _, params, prompts = setup
     engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN)
     reqs = _make_reqs(prompts)
-    engine.add_request(reqs[0])
-    engine.add_request(reqs[1])
+    engine.admit_request(reqs[0], drain=True)
+    engine.admit_request(reqs[1], drain=True)
     while any(r is not None for r in engine.slot_req):
         syncs0, toks0 = engine.host_syncs, engine.tokens_decoded
         engine.step_quantum(4)
@@ -120,7 +120,7 @@ def test_exactly_one_host_sync_per_quantum(setup):
         assert engine.tokens_decoded > toks0
     # per-step baseline: one sync per token
     engine2 = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN)
-    engine2.add_request(_make_reqs(prompts)[0])
+    engine2.admit_request(_make_reqs(prompts)[0], drain=True)
     s0 = engine2.host_syncs
     engine2.step()
     engine2.step()
@@ -135,7 +135,7 @@ def test_quanta_beyond_max_bucket_split_and_stay_exact(setup):
     engine = ServingEngine(cfg, params, batch_slots=1, max_len=MAX_LEN,
                            quantum_buckets=(1, 2))
     req = Request(rid=0, prompt=prompts[0], max_new_tokens=9)
-    engine.add_request(req)
+    engine.admit_request(req, drain=True)
     calls = 0
     while not req.done:
         h = engine.begin_quantum(16)
@@ -153,13 +153,13 @@ def test_mid_quantum_completion_frees_slot_for_next_admission(setup):
     cfg, model, params, prompts = setup
     engine = ServingEngine(cfg, params, batch_slots=1, max_len=MAX_LEN)
     short = Request(rid=0, prompt=prompts[0], max_new_tokens=2)
-    engine.add_request(short)
+    engine.admit_request(short, drain=True)
     engine.step_quantum(8)                 # freezes after 2 steps
     assert short.done
     assert engine._free_slot() == 0
     want = _sequential_reference(model, params, prompts[2], 4)
     nxt = Request(rid=1, prompt=prompts[2], max_new_tokens=4)
-    engine.add_request(nxt)
+    engine.admit_request(nxt, drain=True)
     while not nxt.done:
         engine.step_quantum(4)
     assert nxt.output[:5] == want[:5]
@@ -177,8 +177,8 @@ def test_level_sweep_after_warmup_traces_flat_with_quanta(setup):
     for entry in vc._entries.values():
         assert set(entry.quanta) == {2, 4}, "buckets prebuilt at warmup"
     traces0, misses0 = vc.traces, vc.misses
-    engine.add_request(Request(rid=0, prompt=prompts[0],
-                               max_new_tokens=64))
+    engine.admit_request(Request(rid=0, prompt=prompts[0],
+                               max_new_tokens=64), drain=True)
     for i in range(cm.NUM_LEVELS):
         engine.set_interference_level(cm.grid_point(i))
         engine.step_quantum(3)
@@ -196,7 +196,7 @@ def test_zero_budget_request_finishes_under_fused_dispatch(setup):
     def run(fused):
         engine = ServingEngine(cfg, params, batch_slots=1, max_len=MAX_LEN)
         req = Request(rid=0, prompt=prompts[0], max_new_tokens=0)
-        engine.add_request(req)
+        engine.admit_request(req, drain=True)
         for _ in range(4):
             if req.done:
                 break
@@ -217,7 +217,7 @@ def test_warmup_mid_serving_preserves_inflight_state(setup):
     want = _sequential_reference(model, params, prompts[0], 6)
     engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN)
     req = Request(rid=0, prompt=prompts[0], max_new_tokens=6)
-    engine.add_request(req)
+    engine.admit_request(req, drain=True)
     engine.step()
     engine.step()
     engine.warmup(prompt_lens=(len(prompts[0]),))   # mid-serving warmup

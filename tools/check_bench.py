@@ -1,4 +1,5 @@
-"""Bench gate: the fused dispatch quantum must actually win.
+"""Bench gate: the fused dispatch quantum must actually win, and
+SLO-tiered scheduling must actually buy queries-under-QoS.
 
 Reads BENCH_serving.json (written by ``python -m
 benchmarks.bench_online_serving [--tiny]`` at the repo root) and fails
@@ -6,14 +7,20 @@ if the fused quantum path's warm decode throughput regressed below the
 per-step dispatch loop (minus a noise tolerance — wall-clock on shared
 runners is not deterministic), if fusion stopped coarsening the host
 boundary (tokens per device->host sync back at ~1; strict — counted,
-not timed), or if the chunked prefill path retraced under mixed-length
-traffic (strict).  Run from the repo root:
+not timed), if the chunked prefill path retraced under mixed-length
+traffic (strict), or if the ``slo`` section's headline metric slipped:
+SLO-tiered EDF + admission control must serve >= SLO_GAIN_MIN x the
+queries-under-QoS (``qps_at_qos``) of the FIFO baseline at equal
+offered load, with strict tier ordering (interactive qos_rate >=
+standard >= batch) and token-identical per-request outputs across the
+two schedules — all three strict, because the slo serve runs in
+deterministic virtual time.  Run from the repo root:
 
     python -m benchmarks.bench_online_serving --tiny
     python tools/check_bench.py
 
-Exit code 0 = fused dispatch holds its win; 1 = regression (each failed
-check is printed).
+Exit code 0 = every gate holds; 1 = regression (each failed check is
+printed).
 """
 from __future__ import annotations
 
@@ -31,6 +38,13 @@ DEFAULT = ROOT / "BENCH_serving.json"
 # win — shows up far below it); the tokens-per-sync check stays strict
 # because it is deterministic (counted, not timed).
 THROUGHPUT_TOLERANCE = 0.10
+
+# The slo section is virtual-time deterministic (no wall-clock noise),
+# so its gates are exact.  The ISSUE-6 acceptance floor: SLO-tiered
+# scheduling must serve at least this multiple of the FIFO baseline's
+# queries-under-QoS on the bursty overload workload.
+SLO_GAIN_MIN = 1.3
+SLO_TIER_ORDER = ("interactive", "standard", "batch")
 
 
 def check(path: pathlib.Path) -> list[str]:
@@ -80,6 +94,42 @@ def check(path: pathlib.Path) -> list[str]:
                 "monolithic prefill arm performed zero retraces on a "
                 "mixed-length workload — the benchmark is not actually "
                 "exercising the length spread")
+    errors.extend(check_slo(data.get("slo")))
+    return errors
+
+
+def check_slo(s: dict | None) -> list[str]:
+    """The SLO-tiered scheduling gates (all strict: virtual time)."""
+    if not s or "fifo" not in s or "slo" not in s:
+        return ["BENCH_serving.json has no slo section (stale file?) — "
+                "rerun `python -m benchmarks.bench_online_serving --tiny`"]
+    errors = []
+    fifo_q, slo_q = s["fifo"]["qps_at_qos"], s["slo"]["qps_at_qos"]
+    if not slo_q >= SLO_GAIN_MIN * fifo_q:
+        errors.append(
+            f"SLO-tiered scheduling lost its queries-under-QoS win: "
+            f"{slo_q} qps_at_qos vs fifo's {fifo_q} "
+            f"(need >= {SLO_GAIN_MIN}x at equal offered load)")
+    rates = s["slo"]["per_tier_qos_rate"]
+    missing = [t for t in SLO_TIER_ORDER if t not in rates]
+    if missing:
+        errors.append(f"slo arm is missing tier slices {missing} — the "
+                      "workload no longer exercises all three tiers")
+    else:
+        for hi, lo in zip(SLO_TIER_ORDER, SLO_TIER_ORDER[1:]):
+            if not rates[hi] >= rates[lo]:
+                errors.append(
+                    f"tier inversion under the slo schedule: {hi} "
+                    f"qos_rate {rates[hi]} < {lo} qos_rate {rates[lo]} "
+                    "(tighter tiers must never fare worse)")
+    if not s.get("token_identical", False):
+        errors.append(
+            "fifo and slo schedules produced different per-request token "
+            "streams — scheduling must reorder quanta, never change what "
+            "a request computes")
+    if s.get("common_requests", 0) <= 0:
+        errors.append("fifo and slo arms served no common requests — the "
+                      "token-identity check is vacuous")
     return errors
 
 
@@ -99,6 +149,16 @@ def main() -> int:
         print(f"bench gate: chunked prefill holds zero retraces "
               f"({p['chunked']['post_warmup_traces']} vs monolithic's "
               f"{p['monolithic']['post_warmup_traces']} on mixed lengths)")
+    if data.get("slo"):
+        s = data["slo"]
+        rates = s["slo"]["per_tier_qos_rate"]
+        print(f"bench gate: slo scheduling serves "
+              f"{s['gain_qps_at_qos']}x fifo's queries-under-QoS "
+              f"({s['slo']['qps_at_qos']} vs {s['fifo']['qps_at_qos']} "
+              f"qps_at_qos; tiers "
+              + "/".join(f"{t}={rates[t]}" for t in SLO_TIER_ORDER
+                         if t in rates)
+              + f"; token_identical={s['token_identical']})")
     return 0
 
 

@@ -41,6 +41,17 @@ Sections:
                                    column reports mean TTFT, post-warmup
                                    jax traces (chunked must hold 0 — CI
                                    gated) and bucket-padding overhead
+  * paged/<arm>_peak_concurrent    dense vs paged KV cache at an EQUAL
+                                   device memory budget: peak concurrent
+                                   requests, peak resident tokens, cache
+                                   utilization and post-warmup traces per
+                                   arm; derived rows report the paged
+                                   concurrency gain (CI gate: >= 1.5x at
+                                   token-identical outputs), the counted
+                                   shed/defer response of admission to
+                                   page-pool exhaustion, and >= 1 page
+                                   deduplicated by cross-request prefix
+                                   sharing in a 2-tenant paged cluster
   * slo/<sched>_qps_at_qos         the headline metric: queries served
                                    UNDER their SLO deadline per second,
                                    on a bursty (Gamma-modulated Poisson)
@@ -85,7 +96,7 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_serving.json"
 
 
-def _engine(plans, **kw):
+def _engine(plans, *, batch_slots=2, max_len=32, **kw):
     import jax
 
     from repro.configs import get_reduced_config
@@ -95,7 +106,8 @@ def _engine(plans, **kw):
     cfg = get_reduced_config("gemma-2b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    return ServingEngine(cfg, params, batch_slots=2, max_len=32,
+    return ServingEngine(cfg, params, batch_slots=batch_slots,
+                         max_len=max_len,
                          version_sets=engine_version_sets(plans), **kw)
 
 
@@ -367,11 +379,131 @@ def slo_scheduling(*, n_queries: int = 48, qps: float = 900.0) -> dict:
     return section
 
 
-def write_bench_json(quantum: dict, prefill: dict, slo: dict,
+def paged_serving(plans, *, n_queries: int = 20) -> dict:
+    """Memory as a scheduling dimension: dense vs paged KV residency at
+    an EQUAL device memory budget.
+
+    Dense row allocation pins ``batch_slots * max_len`` tokens of KV the
+    moment an engine is built, so an M-token budget caps concurrency at
+    ``M // max_len`` slots no matter how short the resident requests
+    are.  The paged engine draws ``page_size``-token pages on demand
+    from the same M-token pool, admits by worst-case page *commitment*,
+    and deduplicates common prompt prefixes across requests — so the
+    identical workload runs at higher peak concurrency on the same
+    memory.  Both arms serve in virtual time (deterministic per seed),
+    so the CI gates are exact: >= 1.5x peak concurrent requests,
+    token-identical per-request outputs, zero post-warmup retraces on
+    the paged arm, a *counted* admission response to page-pool
+    exhaustion (tiny-pool arm), and >= 1 page shared via the prefix
+    index in a two-tenant paged cluster."""
+    max_len, page = 32, 8
+    budget = 2 * max_len                # device KV budget, in tokens
+    wl = Workload.bursty(TENANTS, 400.0, n_queries, prompt_len=8,
+                         max_new_tokens=3, seed=5, prompt_len_spread=3,
+                         shared_prefix_len=page)
+    section: dict = {"memory_budget_tokens": budget, "max_len": max_len,
+                     "n_queries": wl.n_queries}
+    outputs: dict[str, dict] = {}
+    arms = (("dense", dict(batch_slots=budget // max_len)),
+            ("paged", dict(batch_slots=6, page_size=page,
+                           n_pages=budget // page)))
+    for name, kw in arms:
+        engine = _engine(plans, max_len=max_len, **kw)
+        engine.warmup(prompt_lens=(wl.prompt_len,))
+        traces0 = engine.version_cache.traces
+        runtime = OnlineRuntime(engine, VeltairPolicy(HW), plans, HW)
+        t0 = time.time()
+        m = runtime.serve(wl)
+        wall = time.time() - t0
+        outputs[name] = runtime.outputs
+        arm = {
+            "batch_slots": engine.slots,
+            "peak_concurrent": int(engine.peak_active_slots),
+            "peak_resident_tokens": int(
+                engine.pool.peak_used * engine.page_size if engine.paged
+                else engine.slots * engine.max_len),
+            "peak_cache_tokens": int(m.peak_cache_tokens),
+            "cache_utilization": round(m.cache_utilization, 3),
+            "post_warmup_traces": int(engine.version_cache.traces
+                                      - traces0),
+            "qos_rate": round(m.qos_rate, 3),
+            "wall_s": round(wall, 4),
+        }
+        if engine.paged:
+            arm["page_stats"] = engine.page_stats
+        section[name] = arm
+        emit(f"paged/{name}_peak_concurrent", arm["peak_concurrent"],
+             f"resident_tok={arm['peak_resident_tokens']};"
+             f"peak_cache_tok={arm['peak_cache_tokens']};"
+             f"util={arm['cache_utilization']};"
+             f"traces={arm['post_warmup_traces']}")
+    section["token_identical"] = outputs["dense"] == outputs["paged"]
+    section["concurrency_gain"] = round(
+        section["paged"]["peak_concurrent"]
+        / max(section["dense"]["peak_concurrent"], 1), 2)
+    emit("paged/concurrency_gain_x", section["concurrency_gain"],
+         f"token_identical={section['token_identical']};"
+         f"shared_hits={section['paged']['page_stats']['shared_hits']};"
+         f"budget_tok={budget}")
+
+    # admission control must respond to page-pool exhaustion: a pool too
+    # small for the workload's worst-case commitments defers (counted)
+    # instead of stalling silently or corrupting resident rows
+    tiny = _engine(plans, max_len=max_len, batch_slots=4, page_size=page,
+                   n_pages=3)
+    tiny.warmup(prompt_lens=(wl.prompt_len,))
+    runtime = OnlineRuntime(tiny, VeltairPolicy(HW), plans, HW,
+                            admission=AdmissionController())
+    twl = Workload.bursty(TENANTS, 400.0, n_queries, prompt_len=8,
+                          max_new_tokens=3, seed=5, prompt_len_spread=3,
+                          shared_prefix_len=page,
+                          tiers={t: "standard" for t in TENANTS})
+    tm = runtime.serve(twl)
+    section["tiny_pool"] = {
+        "n_pages": 3,
+        "shed": int(tm.shed_queries),
+        "deferred": int(tm.deferred_queries),
+        "conflicts": int(tiny.page_stats["conflicts"]),
+        "served": int(tm.n_queries),
+    }
+    emit("paged/tiny_pool_deferred", tm.deferred_queries,
+         f"shed={tm.shed_queries};"
+         f"conflicts={tiny.page_stats['conflicts']}")
+
+    # cross-tenant prefix sharing on the cluster path: each tenant's
+    # prompts carry a common prefix (ClusterRuntime.tenant_prompts), so
+    # temporally-overlapping requests must deduplicate resident pages
+    archs = CLUSTER_ARCHS[:2]
+    tenants = build_cluster(archs, HW, batch_slots=2, max_len=max_len,
+                            page_size=page)
+    cluster = ClusterRuntime(tenants, VeltairPolicy(HW), HW,
+                             admission=AdmissionController())
+    cluster.warmup(prompt_lens=(12,))
+    cwl = Workload.bursty(archs, 200.0, 16, prompt_len=12,
+                          max_new_tokens=4, seed=5, shared_prefix_len=10,
+                          tiers={archs[0]: "interactive",
+                                 archs[1]: "batch"})
+    cmx = cluster.serve(cwl)
+    shared = sum(s.get("shared_hits", 0) for s in cmx.page_stats.values())
+    section["cluster"] = {
+        "tenants": list(archs),
+        "shared_hits": int(shared),
+        "cow_copies": int(sum(s.get("cow_copies", 0)
+                              for s in cmx.page_stats.values())),
+        "cache_utilization": round(cmx.aggregate.cache_utilization, 3),
+        "page_stats": cmx.page_stats,
+    }
+    emit("paged/cluster_shared_hits", shared,
+         f"cow={section['cluster']['cow_copies']};"
+         f"util={section['cluster']['cache_utilization']}")
+    return section
+
+
+def write_bench_json(quantum: dict, prefill: dict, slo: dict, paged: dict,
                      mode: str) -> None:
     BENCH_JSON.write_text(json.dumps(
         {"bench": "online_serving", "mode": mode, "quantum": quantum,
-         "prefill": prefill, "slo": slo},
+         "prefill": prefill, "slo": slo, "paged": paged},
         indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}", flush=True)
 
@@ -382,20 +514,22 @@ def run_all():
     level_switch_cost(plans)
     colocation_policies()
     write_bench_json(quantum_dispatch(plans), prefill_dispatch(plans),
-                     slo_scheduling(), "full")
+                     slo_scheduling(), paged_serving(plans), "full")
 
 
 def run_tiny():
     """CI-sized run: the quantum fused-vs-per-step comparison, the
-    mixed-length prefill section, and the SLO scheduling comparison (all
-    CI-gated).  More repeats than the full run for the wall-clock
-    quantum section — the CI gate compares those numbers on noisy shared
-    runners, so best-of needs extra samples; the slo section is
-    virtual-time deterministic and needs none."""
+    mixed-length prefill section, the SLO scheduling comparison and the
+    paged-vs-dense memory comparison (all CI-gated).  More repeats than
+    the full run for the wall-clock quantum section — the CI gate
+    compares those numbers on noisy shared runners, so best-of needs
+    extra samples; the slo and paged sections are virtual-time
+    deterministic and need none."""
     plans = build_paper_plans(TENANTS, HW)
     write_bench_json(quantum_dispatch(plans, n_queries=16, repeats=5),
                      prefill_dispatch(plans, n_queries=12),
-                     slo_scheduling(n_queries=36), "tiny")
+                     slo_scheduling(n_queries=36),
+                     paged_serving(plans, n_queries=16), "tiny")
 
 
 if __name__ == "__main__":

@@ -102,6 +102,12 @@ class ServingMetrics:
                                     # never silently dropped)
     deferred_queries: int = 0       # admissions delayed past arrival by the
                                     # admission controller
+    peak_cache_tokens: int = 0      # max tokens live requests held resident
+                                    # at once (KV-cache occupancy high-water)
+    cache_utilization: float = 0.0  # peak valid tokens / resident capacity —
+                                    # dense pins slots*max_len, paged pins
+                                    # allocated pages (shared pages counted
+                                    # once, so sharing can push this past 1)
     per_tier: dict[str, TierMetrics] = dataclasses.field(default_factory=dict)
 
 
@@ -120,7 +126,8 @@ def _tier_slice(records: list[QueryRecord]) -> TierMetrics:
 def summarize(records: list[QueryRecord], qps_offered: float,
               conflict_rate: float, busy_unit_time: float,
               alloc_unit_time: float, *, shed: int = 0,
-              deferred: int = 0) -> ServingMetrics:
+              deferred: int = 0, peak_cache_tokens: int = 0,
+              cache_utilization: float = 0.0) -> ServingMetrics:
     """The one record->metrics reduction.  Both ``OnlineRuntime.serve``
     and ``ClusterRuntime.serve`` (per tenant and aggregate) funnel their
     tier-labelled ``QueryRecord``s through here, so per-tier
@@ -128,7 +135,9 @@ def summarize(records: list[QueryRecord], qps_offered: float,
     if not records:
         return ServingMetrics(qps_offered, 0.0, float("inf"), float("inf"),
                               conflict_rate, 0.0, 0.0,
-                              shed_queries=shed, deferred_queries=deferred)
+                              shed_queries=shed, deferred_queries=deferred,
+                              peak_cache_tokens=peak_cache_tokens,
+                              cache_utilization=cache_utilization)
     lats = np.array([r.latency for r in records])
     sat = np.mean([r.satisfied for r in records])
     span = max(max(r.finish for r in records)
@@ -155,6 +164,8 @@ def summarize(records: list[QueryRecord], qps_offered: float,
         qps_at_qos=n_sat / span,
         shed_queries=shed,
         deferred_queries=deferred,
+        peak_cache_tokens=peak_cache_tokens,
+        cache_utilization=cache_utilization,
         per_tier=per_tier,
     )
 

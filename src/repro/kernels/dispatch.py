@@ -129,6 +129,25 @@ def get_attention() -> Callable | None:
     return attn
 
 
+def get_paged_attention() -> Callable | None:
+    """Paged-decode attention (KV read through a scalar-prefetched page
+    table).  None in "xla" mode — callers gather the pool through the
+    table and fall back to reference attention.  Unlike dense attention
+    there is no tile override: the page size fixes the kv block."""
+    if _MODE == "xla":
+        return None
+    from repro.kernels import ops
+    interpret = _MODE == "interpret"
+
+    def attn(q, k_pool, v_pool, *, page_table, q_positions, kv_valid_len,
+             window, softcap):
+        return ops.flash_attention_paged(
+            q, k_pool, v_pool, page_table=page_table,
+            q_positions=q_positions, kv_valid_len=kv_valid_len,
+            window=window, softcap=softcap, interpret=interpret)
+    return attn
+
+
 def get_ssd() -> Callable | None:
     if _MODE == "xla":
         return None

@@ -136,3 +136,70 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         interpret=interpret,
     )(scalars, q, k, v)
     return out[:, :s]
+
+
+def _paged_flash_kernel(scalars_ref, table_ref, *rest, **kw):
+    # the page table is consumed entirely by the KV BlockSpec index_maps;
+    # the kernel body is the dense flash kernel (block ki IS logical page
+    # ki, so its position arithmetic holds unchanged)
+    return _flash_kernel(scalars_ref, *rest, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "interpret"))
+def flash_attention_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                          page_table: jax.Array, *, offset, kv_valid_len,
+                          window: int | None = None,
+                          softcap: float | None = None,
+                          interpret: bool = False) -> jax.Array:
+    """Decode flash attention reading KV through a per-slot page table.
+
+    q (B,S,H,D) with small S (decode: 1); k/v pools (P, page_size, K, D)
+    where P counts physical pages (index 0 is the pinned trash page);
+    page_table (B, pages_per_slot) int32 maps each row's logical page to
+    a physical one.  The table is the *second* scalar-prefetch operand —
+    the KV BlockSpec index_map reads ``table[bi, ki]``, so each grid step
+    DMAs exactly one physical page and the kv block size is the page
+    size.  Unallocated entries point at trash; their garbage keys sit at
+    logical positions >= kv_valid and are masked like any invalid slot.
+    """
+    b, s, h, d = q.shape
+    ps_sz, kh = k_pool.shape[1], k_pool.shape[2]
+    g = h // kh
+    n_slot = page_table.shape[1]
+    t = n_slot * ps_sz
+    off = jnp.broadcast_to(jnp.asarray(offset, jnp.int32).reshape(-1), (b,))
+    kvl = jnp.broadcast_to(
+        jnp.minimum(jnp.asarray(kv_valid_len, jnp.int32), t).reshape(-1),
+        (b,))
+    scalars = jnp.stack([off, kvl])                           # (2, B)
+    table = page_table.astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, 1, n_slot),
+        in_specs=[
+            pl.BlockSpec((1, s, 1, d),
+                         lambda bi, hi, qi, ki, sc, tb: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, ps_sz, 1, d),
+                         lambda bi, hi, qi, ki, sc, tb: (tb[bi, ki], 0,
+                                                         hi // g, 0)),
+            pl.BlockSpec((1, ps_sz, 1, d),
+                         lambda bi, hi, qi, ki, sc, tb: (tb[bi, ki], 0,
+                                                         hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, 1, d),
+                               lambda bi, hi, qi, ki, sc, tb: (bi, qi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((s,), jnp.float32),
+            pltpu.VMEM((s,), jnp.float32),
+            pltpu.VMEM((s, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_flash_kernel, kv_steps=n_slot, bq=s,
+                          bkv=ps_sz, scale=d ** -0.5, window=window,
+                          softcap=softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, s, h, d), q.dtype),
+        interpret=interpret,
+    )(scalars, table, q, k_pool, v_pool)

@@ -39,6 +39,23 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                interpret=interpret)
 
 
+def flash_attention_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                          *, page_table: jax.Array, q_positions: jax.Array,
+                          kv_valid_len, window=None, softcap=None,
+                          interpret: bool = False) -> jax.Array:
+    """Adapter for the page-table decode kernel: k/v are physical page
+    pools (P, page_size, K, D) and ``page_table`` (B, pages_per_slot)
+    maps each row's logical pages.  No tile knob — the page size IS the
+    kv block size (one page per DMA), so adaptive tile tables don't
+    shape this op."""
+    offset = q_positions[..., 0].reshape(-1)
+    return _fa.flash_attention_paged(q, k_pool, v_pool, page_table,
+                                     offset=offset,
+                                     kv_valid_len=kv_valid_len,
+                                     window=window, softcap=softcap,
+                                     interpret=interpret)
+
+
 def ssd_scan(x, dt, a, b, c, *, chunk_size: int = 256, initial_state=None,
              interpret: bool = False):
     return _ssd.ssd_scan(x, dt, a, b, c, chunk_size=chunk_size,

@@ -209,7 +209,9 @@ def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
               positions: jax.Array, cache: dict | None = None,
-              cache_index: jax.Array | None = None) -> tuple[jax.Array, dict | None]:
+              cache_index: jax.Array | None = None,
+              page_table: jax.Array | None = None,
+              ) -> tuple[jax.Array, dict | None]:
     """Self-attention with optional KV cache.
 
     cache: {"k": (B, Tmax, K, D), "v": ...}; cache_index: absolute position
@@ -217,6 +219,14 @@ def attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
     a (B,) int32 vector when batch rows sit at different positions
     (continuous batching: each serving slot decodes at its own position
     with its own kv-valid horizon).  Returns (y, updated_cache).
+
+    With ``page_table`` (B, pages_per_slot) the cache leaves are physical
+    page pools ``(n_pages + 1, page_size, K, D)``: the new token's KV is
+    scattered into its slot's page at ``cache_index``, and attention reads
+    through the table (a scalar-prefetched Pallas kernel when a paged
+    kernel is dispatched, a pool gather on the XLA reference path).
+    Decode-only — prefill accumulates into dense row caches, which the
+    serving engine scatters into pages at admission.
     """
     b, s, m = x.shape
     q = jnp.einsum("bsm,mhd->bshd", x, params["wq"].astype(x.dtype))
@@ -231,6 +241,30 @@ def attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
         y = attend(q, k, v, q_positions=qpos, kv_valid_len=s,
                    window=cfg.sliding_window)
         new_cache = None
+    elif page_table is not None:
+        if s != 1:
+            raise ValueError("paged attention is decode-only (S=1)")
+        idx = jnp.broadcast_to(
+            jnp.asarray(cache_index, jnp.int32).reshape(-1), (b,))
+        ps_sz = cache["k"].shape[1]
+        bidx = jnp.arange(b, dtype=jnp.int32)
+        phys = page_table[bidx, idx // ps_sz]       # (B,) physical page
+        off = idx % ps_sz
+        ck = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = {"k": ck, "v": cv}
+        from repro.kernels import dispatch
+        fn = dispatch.get_paged_attention()
+        if fn is not None:
+            y = fn(q, ck, cv, page_table=page_table, q_positions=qpos,
+                   kv_valid_len=idx + 1, window=cfg.sliding_window,
+                   softcap=None)
+        else:
+            n_slot = page_table.shape[1]
+            kd = ck[page_table].reshape(b, n_slot * ps_sz, *ck.shape[2:])
+            vd = cv[page_table].reshape(b, n_slot * ps_sz, *cv.shape[2:])
+            y = attend(q, kd, vd, q_positions=qpos, kv_valid_len=idx + 1,
+                       window=cfg.sliding_window, use_kernel_hook=False)
     else:
         idx = jnp.asarray(cache_index, jnp.int32)
         if idx.ndim:

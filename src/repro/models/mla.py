@@ -65,8 +65,15 @@ def _mask(t: int, q_positions: jax.Array, kv_valid_len) -> jax.Array:
 def mla_attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
                   positions: jax.Array, cache: dict | None = None,
                   cache_index: jax.Array | None = None,
+                  page_table: jax.Array | None = None,
                   ) -> tuple[jax.Array, dict | None]:
-    """MLA self-attention; cache = {"c_kv": (B,T,r), "k_rope": (B,T,1,dr)}."""
+    """MLA self-attention; cache = {"c_kv": (B,T,r), "k_rope": (B,T,1,dr)}.
+
+    With ``page_table`` (B, pages_per_slot) the cached latents live in
+    physical page pools ``(n_pages + 1, page_size, ...)``: decode scatters
+    the new latent into its slot's page and gathers the full horizon
+    through the table (latents are already memory-compressed, so the
+    gather reference path is the paged MLA path — no kernel variant)."""
     mla = cfg.mla
     b, s, m = x.shape
     dn, dr, dv = mla.qk_nope_head_dim, mla.qk_rope_head_dim, mla.v_head_dim
@@ -78,6 +85,26 @@ def mla_attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
     if cache is None:
         ckv_all, krope_all, kv_len = c_kv, k_rope, s
         new_cache = None
+    elif page_table is not None:
+        if s != 1:
+            raise ValueError("paged MLA attention is decode-only (S=1)")
+        idx = jnp.broadcast_to(
+            jnp.asarray(cache_index, jnp.int32).reshape(-1), (b,))
+        ps_sz = cache["c_kv"].shape[1]
+        bidx = jnp.arange(b, dtype=jnp.int32)
+        phys = page_table[bidx, idx // ps_sz]
+        off = idx % ps_sz
+        ckv_pool = cache["c_kv"].at[phys, off].set(
+            c_kv[:, 0].astype(cache["c_kv"].dtype))
+        krope_pool = cache["k_rope"].at[phys, off].set(
+            k_rope[:, 0].astype(cache["k_rope"].dtype))
+        new_cache = {"c_kv": ckv_pool, "k_rope": krope_pool}
+        n_slot = page_table.shape[1]
+        ckv_all = ckv_pool[page_table].reshape(
+            b, n_slot * ps_sz, *ckv_pool.shape[2:])
+        krope_all = krope_pool[page_table].reshape(
+            b, n_slot * ps_sz, *krope_pool.shape[2:])
+        kv_len = idx + 1
     else:
         idx = jnp.asarray(cache_index, jnp.int32)
         if idx.ndim:

@@ -41,6 +41,12 @@ def cache_batch_axis(path) -> int:
     return 1 if any(getattr(p, "key", None) == "blocks" for p in path) else 0
 
 
+def path_keys(path) -> tuple:
+    """A tree path as a plain tuple of dict keys (hashable, comparable
+    against :meth:`Model.paged_leaf_paths`)."""
+    return tuple(getattr(p, "key", None) for p in path)
+
+
 def stack_specs(tree: PyTree, n: int) -> PyTree:
     return jax.tree_util.tree_map(
         lambda s: ParamSpec((n,) + s.shape, s.dtype, ("layers",) + s.axes,
@@ -140,6 +146,7 @@ def _block_cache_specs(cfg: ModelConfig, kind: str, batch: int,
 def _apply_block(cfg: ModelConfig, kind: str, params: dict, x: jax.Array, *,
                  positions: jax.Array, cache: dict | None,
                  t: jax.Array | int, valid_len: jax.Array | None = None,
+                 page_table: jax.Array | None = None,
                  ) -> tuple[jax.Array, dict | None, jax.Array]:
     """-> (x, new_cache, aux_loss).
 
@@ -170,7 +177,8 @@ def _apply_block(cfg: ModelConfig, kind: str, params: dict, x: jax.Array, *,
     if kind in ("moe_ds", "ds_dense0"):
         h, new_cache = mla_mod.mla_attention(
             params["attn"], xa, cfg=cfg, positions=positions, cache=cache,
-            cache_index=t if cache is not None else None)
+            cache_index=t if cache is not None else None,
+            page_table=page_table)
     elif kind == "attn_local":
         h, new_cache = _local_attention(cfg, params["attn"], xa,
                                         positions=positions, cache=cache,
@@ -178,7 +186,8 @@ def _apply_block(cfg: ModelConfig, kind: str, params: dict, x: jax.Array, *,
     else:
         h, new_cache = L.attention(
             params["attn"], xa, cfg=cfg, positions=positions, cache=cache,
-            cache_index=t if cache is not None else None)
+            cache_index=t if cache is not None else None,
+            page_table=page_table)
     x = x + h
     x = hint(x, ("batch", "seq", "embed"))
     xm = L.apply_norm(params["ln2"], x, cfg.norm_type)
@@ -308,6 +317,80 @@ class Model:
             return jnp.zeros_like(leaf)
         return jax.tree_util.tree_map_with_path(fix, cache)
 
+    # -- paged caches -------------------------------------------------------
+    def paged_leaf_paths(self) -> frozenset:
+        """Key-paths of cache leaves that page: linear KV leaves, i.e.
+        those whose spec carries a ``"seq"`` axis (attention k/v, MLA
+        c_kv/k_rope).  Recurrent state (SSM/RG-LRU) and the local-window
+        ring cache are O(1)-or-O(window) per slot and stay dense."""
+        cached = getattr(self, "_paged_paths", None)
+        if cached is None:
+            flat, _ = jax.tree_util.tree_flatten_with_path(
+                self.cache_specs(1, 8),
+                is_leaf=lambda x: isinstance(x, ParamSpec))
+            cached = frozenset(path_keys(p) for p, s in flat
+                               if "seq" in s.axes)
+            self._paged_paths = cached
+        return cached
+
+    def all_cache_leaves_paged(self) -> bool:
+        """True when every cache leaf pages (pure-attention families).
+        Prefix sharing requires this: skipping prefill of a shared prefix
+        is only sound when no dense recurrent state would be skipped."""
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            self.cache_specs(1, 8),
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+        paged = self.paged_leaf_paths()
+        return bool(paged) and all(path_keys(p) in paged for p, _ in flat)
+
+    def paged_cache_specs(self, batch: int, t_max: int, n_pages: int,
+                          page_size: int) -> dict:
+        """Cache specs with every ``"seq"``-axis leaf reshaped from dense
+        rows ``(batch, t_max, ...)`` to a physical page pool
+        ``(n_pages + 1, page_size, ...)`` (index 0 = pinned trash page).
+        One logical page uses the same physical index in every layer's
+        pool, so a single per-slot page table addresses all layers."""
+        if t_max % page_size:
+            raise ValueError(f"t_max={t_max} must be a multiple of "
+                             f"page_size={page_size}")
+
+        def to_pool(spec):
+            if not isinstance(spec, ParamSpec) or "seq" not in spec.axes:
+                return spec
+            si = spec.axes.index("seq")
+            shape = list(spec.shape)
+            shape[si - 1] = n_pages + 1        # batch axis -> physical pages
+            shape[si] = page_size
+            axes = list(spec.axes)
+            axes[si - 1], axes[si] = "pages", None
+            return ParamSpec(tuple(shape), spec.dtype, tuple(axes),
+                             init="zeros")
+
+        return jax.tree_util.tree_map(
+            to_pool, self.cache_specs(batch, t_max),
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    def init_paged_cache(self, batch: int, t_max: int, n_pages: int,
+                         page_size: int) -> PyTree:
+        """Paged variant of :meth:`init_cache`.  Adds a per-slot
+        ``"page_table"`` leaf (batch, t_max // page_size) int32 of
+        physical page indices — all zeros parks every entry on the trash
+        page.  The table rides inside the cache pytree so every compiled
+        executable (decode, quanta, version-cache entries) is keyed on
+        the page-table shape with no signature changes."""
+        cache = init_params(
+            jax.random.PRNGKey(0),
+            self.paged_cache_specs(batch, t_max, n_pages, page_size))
+
+        def fix(path, leaf):
+            if any(getattr(p, "key", None) == "pos" for p in path):
+                return jnp.full_like(leaf, -1)
+            return jnp.zeros_like(leaf)
+        cache = jax.tree_util.tree_map_with_path(fix, cache)
+        cache["page_table"] = jnp.zeros((batch, t_max // page_size),
+                                        jnp.int32)
+        return cache
+
     # -- embedding / head ---------------------------------------------------
     def _embed_inputs(self, params, inputs, positions):
         cfg = self.cfg
@@ -336,7 +419,7 @@ class Model:
 
     # -- stacks ------------------------------------------------------------
     def _run_blocks(self, params, x, *, positions, caches, t, remat="none",
-                    valid_len=None):
+                    valid_len=None, page_table=None):
         cfg, plan = self.cfg, self.plan
         aux_total = jnp.zeros((), jnp.float32)
         new_caches: dict = {}
@@ -349,7 +432,8 @@ class Model:
                 c = gcache.get(key) if gcache is not None else None
                 x2, nc, a = _apply_block(cfg, kind, gp[key], x,
                                          positions=positions, cache=c, t=t,
-                                         valid_len=valid_len)
+                                         valid_len=valid_len,
+                                         page_table=page_table)
                 x = x2
                 aux_g = aux_g + a
                 if nc is not None:
@@ -367,7 +451,8 @@ class Model:
             c = caches.get(f"pro_{i}") if caches is not None else None
             x, nc, a = _apply_block(cfg, kind, params[f"pro_{i}"], x,
                                     positions=positions, cache=c, t=t,
-                                    valid_len=valid_len)
+                                    valid_len=valid_len,
+                                    page_table=page_table)
             aux_total += a
             if nc is not None:
                 new_caches[f"pro_{i}"] = nc
@@ -415,7 +500,8 @@ class Model:
             c = caches.get(f"epi_{i}") if caches is not None else None
             x, nc, a = _apply_block(cfg, kind, params[f"epi_{i}"], x,
                                     positions=positions, cache=c, t=t,
-                                    valid_len=valid_len)
+                                    valid_len=valid_len,
+                                    page_table=page_table)
             aux_total += a
             if nc is not None:
                 new_caches[f"epi_{i}"] = nc
@@ -514,9 +600,19 @@ class Model:
         """One-token decode at absolute position ``t`` — a scalar int32
         (all rows aligned) or a (B,) int32 vector of per-row positions
         (continuous batching: each slot advances independently; attention
-        masks each row at its own kv-valid horizon)."""
+        masks each row at its own kv-valid horizon).
+
+        A paged cache (one holding a ``"page_table"`` leaf — see
+        :meth:`init_paged_cache`) routes KV reads/writes through the
+        per-slot page table; the table itself passes through unchanged
+        (the host owns it)."""
         cfg = self.cfg
         t = jnp.asarray(t, jnp.int32)
+        page_table = cache.get("page_table") if isinstance(cache, dict) \
+            else None
+        caches = cache
+        if page_table is not None:
+            caches = {kk: v for kk, v in cache.items() if kk != "page_table"}
         if "tokens" in inputs:
             b = inputs["tokens"].shape[0]
             toks = inputs["tokens"].reshape(b, 1)
@@ -527,21 +623,37 @@ class Model:
         positions = self._default_positions(b, 1, t)
         x = self._embed_inputs(params, step_in, positions)
         x, new_cache, _ = self._run_blocks(params, x, positions=positions,
-                                           caches=cache, t=t)
+                                           caches=caches, t=t,
+                                           page_table=page_table)
         x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
         logits = L.unembed(params["embed"], x, cfg)
+        if page_table is not None:
+            new_cache = dict(new_cache)
+            new_cache["page_table"] = page_table
         return logits[:, 0], new_cache
 
-    @staticmethod
-    def select_cache_rows(live: jax.Array, new_cache: PyTree,
+    def select_cache_rows(self, live: jax.Array, new_cache: PyTree,
                           old_cache: PyTree) -> PyTree:
         """Per-row cache select: rows where ``live`` is True take
         ``new_cache``, frozen rows keep ``old_cache`` bit-exact.  This is
         what lets a fused multi-step decode freeze finished slots: a
         frozen row's recurrent state (SSM/RG-LRU) and KV writes are fully
         reverted, so its cache is indistinguishable from one that was
-        never stepped."""
+        never stepped.
+
+        Page-pool leaves have no per-row batch axis and are kept as
+        written: a frozen row replays the *same* KV write at its frozen
+        (token, position) — its own pages and dense state are bit-exact
+        reverted, so the recomputation is idempotent — and a free row's
+        table maps every entry to the pinned trash page."""
+        paged = (self.paged_leaf_paths()
+                 if isinstance(new_cache, dict) and "page_table" in new_cache
+                 else frozenset())
+
         def sel(path, n, o):
+            keys = path_keys(path)
+            if keys == ("page_table",) or keys in paged:
+                return n
             shape = [1] * n.ndim
             shape[cache_batch_axis(path)] = live.shape[0]
             return jnp.where(live.reshape(shape), n, o).astype(o.dtype)

@@ -26,6 +26,7 @@ from repro.serving.tenants import (build_paper_plans, cluster_plan,
 from repro.serving.engine import (PREFILL_CHUNK_LEN, QUANTUM_BUCKETS,
                                   PrefillQuantum, QuantumHandle,
                                   ServingEngine)
+from repro.serving.paging import TRASH_PAGE, PagePool
 from repro.serving.version_cache import VersionCache, VersionEntry, tiles_key
 
 __all__ = [
@@ -39,5 +40,6 @@ __all__ = [
     "engine_version_sets", "lm_serving_plans",
     "PREFILL_CHUNK_LEN", "QUANTUM_BUCKETS", "PrefillQuantum",
     "QuantumHandle", "ServingEngine",
+    "TRASH_PAGE", "PagePool",
     "VersionCache", "VersionEntry", "tiles_key",
 ]

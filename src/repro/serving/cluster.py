@@ -120,6 +120,9 @@ class ClusterMetrics:
     tokens_per_sync: dict[str, float] = dataclasses.field(
         default_factory=dict)
     prefill_quanta: dict[str, int] = dataclasses.field(default_factory=dict)
+    page_stats: dict[str, dict] = dataclasses.field(default_factory=dict)
+                                             # per-tenant KV page-pool
+                                             # counters ({} on dense engines)
 
     @property
     def mean_levels(self) -> dict[str, float]:
@@ -132,6 +135,9 @@ def build_cluster(archs: list[str], hw: cm.HardwareSpec, *,
                   qos_scale: float = 3.0, seed: int = 0,
                   plans: dict[str, ModelPlan] | None = None,
                   tiers: dict[str, str] | None = None,
+                  page_size: int | None = None,
+                  n_pages: int | None = None,
+                  page_reserve: str = "worst",
                   ) -> list[EngineTenant]:
     """Stand up one reduced real engine per architecture.
 
@@ -152,7 +158,9 @@ def build_cluster(archs: list[str], hw: cm.HardwareSpec, *,
         params = model.init(jax.random.PRNGKey(seed + i))
         engine = ServingEngine(cfg, params, batch_slots=batch_slots,
                                max_len=max_len,
-                               version_sets=plans[arch].version_sets)
+                               version_sets=plans[arch].version_sets,
+                               page_size=page_size, n_pages=n_pages,
+                               page_reserve=page_reserve)
         out.append(EngineTenant(name=arch, engine=engine, plan=plans[arch],
                                 tier=(tiers or {}).get(arch)))
     return out
@@ -223,11 +231,22 @@ class ClusterRuntime:
         """Per-tenant prompt tables for ``wl`` — seeded per tenant
         position, so co-located tenants never replay byte-identical
         prompt streams, while staying deterministic per (workload seed,
-        cluster layout)."""
-        return {t.name: synth_prompts(wl.n_queries, wl.prompt_len,
-                                      t.engine.cfg.vocab_size,
-                                      wl.seed + idx)
-                for idx, t in enumerate(self.tenants)}
+        cluster layout).  ``wl.shared_prefix_len`` gives every prompt of
+        a tenant the same opening run (a per-tenant system prompt) —
+        on paged engines the prefix index deduplicates those pages
+        across the tenant's co-resident requests."""
+        out = {}
+        for idx, t in enumerate(self.tenants):
+            tbl = synth_prompts(wl.n_queries, wl.prompt_len,
+                                t.engine.cfg.vocab_size, wl.seed + idx)
+            if wl.shared_prefix_len > 0:
+                spl = min(wl.shared_prefix_len, tbl.shape[1])
+                pre = np.random.default_rng(
+                    wl.seed + idx + 0x9EF1).integers(
+                    0, t.engine.cfg.vocab_size, spl)
+                tbl[:, :spl] = pre.astype(tbl.dtype)
+            out[t.name] = tbl
+        return out
 
     def _footprint(self, tenant: EngineTenant, units: int) -> tuple:
         key = (tenant.name, units)
@@ -343,6 +362,8 @@ class ClusterRuntime:
                               tier=tier_of(t.name))
                 if self.scheduler == "slo" and self.admission is not None:
                     entry = self.book.entry(rid)
+                    pages_needed, pages_free = t.engine.admission_pages(
+                        req.prompt, wl.max_new_tokens)
                     decision = self.admission.decide(
                         now=now, entry=entry,
                         spec=self.book.spec(entry.tier),
@@ -352,7 +373,8 @@ class ClusterRuntime:
                         own_decode_steps=wl.max_new_tokens,
                         backlog_chunks=sum(
                             c for _, _, c in t.engine.prefill_queue()),
-                        slot_free=t.engine.active_slots < t.engine.slots)
+                        slot_free=t.engine.active_slots < t.engine.slots,
+                        pages_needed=pages_needed, pages_free=pages_free)
                     if decision == "shed":
                         self.shed += 1
                         self.tenant_shed[t.name] += 1
@@ -589,22 +611,33 @@ class ClusterRuntime:
         per_tenant = {}
         all_records: list[QueryRecord] = []
         busy = alloc = 0.0
+        peak_tokens = peak_cap = 0
         for t in self.tenants:
             st = self._state[t.name]
             n_t = sum(1 for _, name in wl.arrivals if name == t.name)
+            eng = t.engine
             per_tenant[t.name] = summarize(
                 st.records, n_t / span,
                 self.tenant_conflicts[t.name] / max(n_t, 1),
                 st.busy, st.alloc,
                 shed=self.tenant_shed[t.name],
-                deferred=self.tenant_deferred[t.name])
+                deferred=self.tenant_deferred[t.name],
+                peak_cache_tokens=eng.peak_cache_tokens,
+                cache_utilization=eng.cache_utilization)
             all_records.extend(st.records)
             busy += st.busy
             alloc += st.alloc
+            peak_tokens += eng.peak_cache_tokens
+            peak_cap += (eng.pool.peak_used * eng.page_size
+                         if eng.paged and eng.pool is not None
+                         else eng.slots * eng.max_len)
         aggregate = summarize(all_records, wl.qps,
                               self.conflicts / max(wl.n_queries, 1),
                               busy, alloc,
-                              shed=self.shed, deferred=self.deferred)
+                              shed=self.shed, deferred=self.deferred,
+                              peak_cache_tokens=peak_tokens,
+                              cache_utilization=(peak_tokens / peak_cap
+                                                 if peak_cap else 0.0))
         return ClusterMetrics(
             aggregate=aggregate, per_tenant=per_tenant,
             level_traces={t.name: list(self._state[t.name].levels)
@@ -619,4 +652,6 @@ class ClusterRuntime:
             tokens_per_sync={t.name: t.engine.tokens_per_sync
                              for t in self.tenants},
             prefill_quanta={t.name: self._state[t.name].prefill_quanta
-                            for t in self.tenants})
+                            for t in self.tenants},
+            page_stats={t.name: t.engine.page_stats
+                        for t in self.tenants})

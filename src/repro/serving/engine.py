@@ -46,7 +46,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import cost_model as cm
 from repro.kernels import dispatch
-from repro.models.model import Model, build_model, cache_batch_axis
+from repro.models.model import Model, build_model, cache_batch_axis, path_keys
+from repro.serving.paging import TRASH_PAGE, PagePool
 from repro.serving.version_cache import VersionCache
 
 # Fused-quantum executable sizes: a quantum of k decode steps runs as the
@@ -131,14 +132,66 @@ class ServingEngine:
                  version_sets: list | None = None,
                  quantum_buckets: tuple[int, ...] = QUANTUM_BUCKETS,
                  chunked_prefill: bool = True,
-                 prefill_chunk_len: int = PREFILL_CHUNK_LEN):
+                 prefill_chunk_len: int = PREFILL_CHUNK_LEN,
+                 page_size: int | None = None, n_pages: int | None = None,
+                 page_reserve: str = "worst", prefix_sharing: bool = True):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.greedy = greedy
-        self.cache = self.model.init_cache(batch_slots, max_len)
+        # paged KV cache: linear-attention cache leaves live in a global
+        # page pool indexed through a per-slot page table; memory becomes
+        # a scheduler-visible dimension (PagePool commitments gate
+        # admission, free-page headroom clamps decode quanta) and common
+        # prompt prefixes are deduplicated across requests (refcounted
+        # shared pages + copy-on-write).  page_size=None keeps the dense
+        # per-slot row layout.
+        self.paged = page_size is not None
+        self.page_size = int(page_size) if self.paged else 0
+        self.page_reserve = page_reserve
+        if self.paged:
+            if self.page_size < 1 or max_len % self.page_size:
+                raise ValueError(
+                    f"page_size={page_size} must be >= 1 and divide "
+                    f"max_len={max_len}")
+            if page_reserve not in ("worst", "prompt"):
+                raise ValueError(
+                    f"page_reserve={page_reserve!r} not in ('worst', "
+                    "'prompt')")
+            self._paged_paths = self.model.paged_leaf_paths()
+            if not self._paged_paths:
+                raise ValueError(
+                    f"{cfg.arch}: no pageable (linear-KV) cache leaves — "
+                    "recurrent-state models keep the dense layout")
+            self.pages_per_slot = max_len // self.page_size
+            if n_pages is None:
+                n_pages = batch_slots * self.pages_per_slot
+            self.pool: PagePool | None = PagePool(int(n_pages),
+                                                 self.page_size)
+            # prefix sharing splices pool pages under a partially-dense
+            # row, so it needs every seq-axis leaf paged (pure-attention
+            # families; hybrids would leak recurrent state)
+            self.prefix_sharing = bool(prefix_sharing) \
+                and self.model.all_cache_leaves_paged()
+            self.cache = self.model.init_paged_cache(
+                batch_slots, max_len, int(n_pages), self.page_size)
+            # host mirror of the device page table + per-slot page maps
+            self._page_table = np.zeros((batch_slots, self.pages_per_slot),
+                                        np.int32)
+            self._table_dirty = False
+            self._slot_pages: list[dict[int, int]] = [
+                {} for _ in range(batch_slots)]     # logical -> physical
+            self._slot_shared: list[set[int]] = [
+                set() for _ in range(batch_slots)]  # borrowed (COW-guarded)
+            self._slot_commit = [0] * batch_slots   # reserved, unallocated
+        else:
+            self._paged_paths = frozenset()
+            self.pages_per_slot = 0
+            self.pool = None
+            self.prefix_sharing = False
+            self.cache = self.model.init_cache(batch_slots, max_len)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_pos = np.zeros(batch_slots, np.int32)
         # chunked, length-bucketed admission (the scheduled-prefill path):
@@ -155,8 +208,12 @@ class ServingEngine:
         self.prefill_pad_tokens = 0    # bucket-padding tokens (waste)
         self.rejected_invalid = 0      # admissions refused for length
         # pristine single-slot cache row: admissions prefill from this so a
-        # reused slot can never leak the previous tenant's KV / SSM state
-        self._empty_row = self._slice_row(0)
+        # reused slot can never leak the previous tenant's KV / SSM state.
+        # Paged engines prefill into a DENSE batch-1 row (chunk kernels are
+        # layout-oblivious) and scatter it into the pools page-by-page at
+        # finish, so the empty row is a dense row either way.
+        self._empty_row = (self.model.init_cache(1, max_len) if self.paged
+                           else self._slice_row(0))
         # adaptive-compilation state: tiles come from the dominant layer's
         # multi-version table when one is supplied, else the default table
         self.version_sets = version_sets
@@ -181,6 +238,14 @@ class ServingEngine:
         # dynamic_update_slice along the batch axis; slot is a traced
         # scalar, so one executable serves every slot)
         self._row_writer = self._make_row_writer()
+        if self.paged:
+            self._paged_row_writer = self._make_paged_row_writer()
+            self._row_gather = self._make_row_gather()
+            self._page_copier = self._make_page_copier()
+        # occupancy telemetry (ServingMetrics.peak_cache_tokens /
+        # cache_utilization sample these)
+        self.peak_cache_tokens = 0
+        self.peak_active_slots = 0
         self._use_version({})             # baseline: no overrides installed
 
     # ------------------------------------------------------------------
@@ -257,6 +322,12 @@ class ServingEngine:
         # warming up mid-serving must not corrupt in-flight KV/SSM state
         live_rows = [(i, self._slice_row(i))
                      for i, r in enumerate(self.slot_req) if r is not None]
+        if self.paged:
+            # aim every slot at the trash page while warm decodes run:
+            # their garbage writes land there, never in live pool pages
+            self.cache["page_table"] = jnp.zeros_like(
+                self.cache["page_table"])
+            self._table_dirty = True
         toks = jnp.zeros((self.slots,), jnp.int32)
         pos = jnp.zeros((self.slots,), jnp.int32)
         # the currently-active version first (the no-override baseline an
@@ -286,8 +357,23 @@ class ServingEngine:
                     self.params, jnp.zeros((1, int(plen)), jnp.int32),
                     self._empty_row)
                 lg.block_until_ready()
-        for i, row in live_rows:
-            self.cache = self._row_writer(self.cache, row, jnp.int32(i))
+        if self.paged:
+            # warm the engine-level paged helpers too (first admission /
+            # COW must not compile mid-serving); all writes hit trash
+            trash = jnp.zeros(self.pages_per_slot, jnp.int32)
+            self._row_gather(self.cache, self._empty_row, trash)
+            self.cache = self._page_copier(self.cache, jnp.int32(0),
+                                           jnp.int32(0))
+            for i, row in live_rows:
+                self.cache = self._paged_row_writer(self.cache, row,
+                                                    jnp.int32(i), trash)
+            if not live_rows:
+                self.cache = self._paged_row_writer(
+                    self.cache, self._empty_row, jnp.int32(0), trash)
+            self._sync_table()       # restore the real table from the mirror
+        else:
+            for i, row in live_rows:
+                self.cache = self._row_writer(self.cache, row, jnp.int32(i))
         return dict(self.version_cache.stats)
 
     @property
@@ -305,10 +391,31 @@ class ServingEngine:
         return None
 
     def _slice_row(self, slot: int):
-        return jax.tree_util.tree_map_with_path(
-            lambda p, c: jax.lax.slice_in_dim(c, slot, slot + 1,
-                                              axis=cache_batch_axis(p)),
-            self.cache)
+        """Snapshot a slot as a dense batch-1 row cache.  On the paged
+        engine only the dense (recurrent-state) leaves carry per-slot
+        data worth saving — pool leaves are shared across slots and
+        survive in place — so paged leaves come back as zero rows and the
+        restoring write scatters them to the trash page."""
+        if not self.paged:
+            return jax.tree_util.tree_map_with_path(
+                lambda p, c: jax.lax.slice_in_dim(c, slot, slot + 1,
+                                                  axis=cache_batch_axis(p)),
+                self.cache)
+        paths = self._paged_paths
+        max_len = self.max_len
+
+        def f(p, c):
+            keys = path_keys(p)
+            if keys in paths:
+                if keys[0] == "blocks":
+                    shape = (c.shape[0], 1, max_len, *c.shape[3:])
+                else:
+                    shape = (1, max_len, *c.shape[2:])
+                return jnp.zeros(shape, c.dtype)
+            return jax.lax.slice_in_dim(c, slot, slot + 1,
+                                        axis=cache_batch_axis(p))
+        body = {k: v for k, v in self.cache.items() if k != "page_table"}
+        return jax.tree_util.tree_map_with_path(f, body)
 
     @staticmethod
     def _make_row_writer():
@@ -324,14 +431,418 @@ class ServingEngine:
             return jax.tree_util.tree_map_with_path(put, cache, row_cache)
         return jax.jit(write, donate_argnums=(0,))
 
-    def _prefill_schedule(self, n: int) -> collections.deque:
+    def _make_paged_row_writer(self):
+        """Paged counterpart of the row writer: the dense batch-1 row is
+        reshaped into pages and scattered to the physical destinations in
+        ``wtab`` (pages_per_slot,) int32.  Entries mapped to the trash
+        page absorb the content of shared / unallocated logical pages
+        (borrowed prefixes must not be overwritten); dense leaves — the
+        recurrent state of hybrid models — land on their batch axis as in
+        the dense writer.  The device page table passes through
+        untouched (it is host-owned, refreshed by ``_sync_table``)."""
+        paths = self._paged_paths
+        n_slot, ps = self.pages_per_slot, self.page_size
+
+        def write(cache, row_cache, slot, wtab):
+            body = {k: v for k, v in cache.items() if k != "page_table"}
+
+            def put(p, c, r):
+                keys = path_keys(p)
+                if keys in paths:
+                    if keys[0] == "blocks":
+                        rp = r.reshape(r.shape[0], n_slot, ps, *r.shape[3:])
+                        return c.at[:, wtab].set(rp.astype(c.dtype))
+                    rp = r.reshape(n_slot, ps, *r.shape[2:])
+                    return c.at[wtab].set(rp.astype(c.dtype))
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, r.astype(c.dtype), slot, axis=cache_batch_axis(p))
+            out = jax.tree_util.tree_map_with_path(put, body, row_cache)
+            out["page_table"] = cache["page_table"]
+            return out
+        return jax.jit(write, donate_argnums=(0,))
+
+    def _make_row_gather(self):
+        """Materialize a slot's mapped pages into a dense batch-1 row —
+        the shared-prefix admission path: borrowed pages land at their
+        logical offsets so the unshared tail can prefill on top of them.
+        ``trow`` entries still unmapped read the trash page; that garbage
+        sits at positions the remaining chunks overwrite before any query
+        attends to it.  Dense leaves keep the pristine empty row's
+        state."""
+        paths = self._paged_paths
+        n_slot, ps = self.pages_per_slot, self.page_size
+
+        def gather(cache, row_cache, trow):
+            body = {k: v for k, v in cache.items() if k != "page_table"}
+
+            def g(p, c, r):
+                keys = path_keys(p)
+                if keys not in paths:
+                    return r
+                if keys[0] == "blocks":
+                    return c[:, trow].reshape(
+                        c.shape[0], 1, n_slot * ps,
+                        *c.shape[3:]).astype(r.dtype)
+                return c[trow].reshape(1, n_slot * ps,
+                                       *c.shape[2:]).astype(r.dtype)
+            return jax.tree_util.tree_map_with_path(g, body, row_cache)
+        return jax.jit(gather)
+
+    def _make_page_copier(self):
+        """Copy-on-write kernel: duplicate physical page ``src`` into
+        ``dst`` across every pool leaf (one logical page occupies the
+        same physical index in every layer's pool).  Traced scalars, so
+        one executable serves every (src, dst) pair; the cache is donated
+        (in-place update)."""
+        paths = self._paged_paths
+
+        def copy(cache, src, dst):
+            def cp(p, c):
+                keys = path_keys(p)
+                if keys not in paths:
+                    return c
+                ax = 1 if keys[0] == "blocks" else 0
+                page = jax.lax.dynamic_slice_in_dim(c, src, 1, axis=ax)
+                return jax.lax.dynamic_update_slice_in_dim(c, page, dst,
+                                                           axis=ax)
+            return jax.tree_util.tree_map_with_path(cp, cache)
+        return jax.jit(copy, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # Page accounting (paged engines only)
+    # ------------------------------------------------------------------
+    def _sync_table(self) -> None:
+        """Push the host page-table mirror to the device when stale.  The
+        table rides inside the cache pytree, so every compiled executable
+        already takes it — no signature change, no retrace."""
+        if self.paged and self._table_dirty:
+            self.cache["page_table"] = jnp.asarray(self._page_table)
+            self._table_dirty = False
+
+    def _alloc_page(self, slot: int) -> int | None:
+        """One physical page for ``slot``, drawing down its admission
+        commitment first (those draws cannot fail by construction);
+        uncommitted draws may return None when the pool's free surplus is
+        exhausted (counted as a stall by the pool)."""
+        assert self.pool is not None
+        if self._slot_commit[slot] > 0:
+            self._slot_commit[slot] -= 1
+            return self.pool.alloc(reserved=True)
+        return self.pool.alloc(reserved=False)
+
+    def _probe_prefix(self, prompt) -> tuple[list, tuple | None]:
+        """Published pages covering a prefix of ``prompt``: the list of
+        full-page hits [(logical, physical), ...] plus an optional
+        partial-tail hit — a published page whose token span *covers* the
+        entire remaining prompt (the borrower attends only to its own
+        prefix of the page; positions beyond are causally masked until
+        copy-on-write privatizes them)."""
+        assert self.pool is not None
+        ps = self.page_size
+        toks = tuple(int(t) for t in prompt)
+        n = len(toks)
+        shared: list[tuple[int, int]] = []
+        j = 0
+        while (j + 1) * ps <= n:
+            phys = self.pool.lookup(toks[:j * ps], toks[j * ps:(j + 1) * ps])
+            if phys is None:
+                break
+            shared.append((j, phys))
+            j += 1
+        partial = None
+        rem = toks[j * ps:]
+        if rem and len(rem) < ps:
+            phys = self.pool.lookup_covering(toks[:j * ps], rem)
+            if phys is not None:
+                partial = (j, phys)
+        return shared, partial
+
+    def admission_pages(self, prompt,
+                        max_new_tokens: int) -> tuple[int, int | None]:
+        """(pages_needed, pages_free) for the admission controller: the
+        worst-case pages this request would commit (net of shareable
+        prefix pages) and the pool's uncommitted free surplus.  Dense
+        engines report (0, None) — memory is not a conflict dimension
+        there."""
+        if not self.paged:
+            return 0, None
+        assert self.pool is not None
+        n = len(prompt)
+        shared: list = []
+        if self.prefix_sharing and self.chunked_prefill:
+            shared, _ = self._probe_prefix(prompt)
+        horizon = (n + max(int(max_new_tokens), 1)
+                   if self.page_reserve == "worst" else n + 1)
+        need = self.pool.pages_for(min(horizon, self.max_len)) - len(shared)
+        return max(need, 0), self.pool.uncommitted_free
+
+    def _paged_admit(self, req: Request, slot: int,
+                     n: int) -> tuple[int, object] | None:
+        """Page-pool side of admission: probe the prefix index, commit
+        the worst-case page budget, map shared pages (refcounted) and
+        allocate owned pages covering the unshared prompt region.
+        Returns (start, row_cache) — the prefill start offset (shared
+        tokens skip prefill; the final prompt token always prefills so
+        the first-token logits exist) and the row to prefill into — or
+        None when the pool cannot commit (counted as a page conflict)."""
+        assert self.pool is not None
+        pool, ps = self.pool, self.page_size
+        shared: list[tuple[int, int]] = []
+        partial: tuple | None = None
+        if self.prefix_sharing and self.chunked_prefill:
+            shared, partial = self._probe_prefix(req.prompt)
+        horizon = (n + max(req.max_new_tokens, 1)
+                   if self.page_reserve == "worst" else n + 1)
+        commit = max(
+            pool.pages_for(min(horizon, self.max_len)) - len(shared), 0)
+        if not pool.commit(commit):
+            return None
+        self._slot_commit[slot] = commit
+        pages = self._slot_pages[slot]
+        borrowed = self._slot_shared[slot]
+        pages.clear()
+        borrowed.clear()
+        trow = self._page_table[slot]
+        trow[:] = TRASH_PAGE
+        shared_len = len(shared) * ps
+        if partial is not None:
+            shared = shared + [partial]
+            shared_len = n
+        for j, phys in shared:
+            pool.retain(phys)
+            pool.shared_hits += 1
+            pages[j] = phys
+            borrowed.add(j)
+            trow[j] = phys
+        # owned pages covering the rest of the prompt (commitment covers
+        # every one of them, so these allocations cannot fail)
+        for j in range(len(shared), pool.pages_for(n)):
+            phys = self._alloc_page(slot)
+            assert phys is not None
+            pages[j] = phys
+            trow[j] = phys
+        self._table_dirty = True
+        # the final prompt token must prefill even when fully shared:
+        # its forward pass produces the first-token logits
+        start = min(shared_len, n - 1)
+        if start > 0:
+            row = self._row_gather(self.cache, self._empty_row,
+                                   jnp.asarray(trow))
+        else:
+            row = self._empty_row
+        return start, row
+
+    def _write_table(self, slot: int) -> np.ndarray:
+        """Scatter destinations for a finished prefill row: owned pages
+        keep their physical index, borrowed and unmapped pages divert to
+        the trash page (their content either already lives in the pool or
+        was never real)."""
+        wtab = np.full(self.pages_per_slot, TRASH_PAGE, np.int32)
+        borrowed = self._slot_shared[slot]
+        for j, phys in self._slot_pages[slot].items():
+            if j not in borrowed:
+                wtab[j] = phys
+        return wtab
+
+    def _publish_slot_pages(self, slot: int, req: Request) -> None:
+        """Advertise the slot's owned FULL prompt pages in the pool's
+        prefix index.  Partial tail pages are never published — decode
+        writes into them, and unpublished pages need no COW for their
+        owner (published spans end at or before the prompt, decode writes
+        strictly after, so an owner never writes its own published
+        page)."""
+        if not (self.paged and self.prefix_sharing):
+            return
+        assert self.pool is not None
+        ps = self.page_size
+        toks = tuple(int(t) for t in req.prompt)
+        n = len(toks)
+        borrowed = self._slot_shared[slot]
+        for j, phys in self._slot_pages[slot].items():
+            if j not in borrowed and (j + 1) * ps <= n:
+                self.pool.publish(toks[:j * ps], toks[j * ps:(j + 1) * ps],
+                                  phys)
+
+    def release_slot(self, slot: int) -> None:
+        """Invalidate a freed slot's cache state before reuse — the
+        completion-side half of the pristine-row guarantee (admission
+        writes a pristine row; release must not leave the previous
+        tenant's state reachable).  Dense: scatter the empty row over the
+        slot.  Paged: drop the slot's page references (a page frees when
+        its last holder leaves; published pages another request still
+        shares survive), return unused commitment, and park the table row
+        on the trash page."""
+        self.slot_req[slot] = None
+        self.slot_pos[slot] = 0
+        if not self.paged:
+            self.cache = self._row_writer(self.cache, self._empty_row,
+                                          jnp.int32(slot))
+            return
+        assert self.pool is not None
+        for phys in self._slot_pages[slot].values():
+            self.pool.release(phys)
+        self._slot_pages[slot].clear()
+        self._slot_shared[slot].clear()
+        self.pool.uncommit(self._slot_commit[slot])
+        self._slot_commit[slot] = 0
+        self._page_table[slot, :] = TRASH_PAGE
+        self._table_dirty = True
+
+    def _paged_preflight(self, active: list[int],
+                         n_left: np.ndarray) -> np.ndarray:
+        """Map / privatize every page the coming decode writes touch.
+
+        For each row writing positions [pos, pos + n_left): allocate
+        missing pages (commitment first), and privatize borrowed pages
+        before the first write — copy-on-write when other holders remain,
+        plain ownership takeover (unpublish) when this slot is the last.
+        Rows that cannot get a page are clamped to the last mapped
+        position (pool counts the stall); with page_reserve="worst"
+        stalls are impossible by construction.  Ends by refreshing the
+        device table."""
+        assert self.pool is not None
+        pool, ps = self.pool, self.page_size
+        for i in active:
+            steps = int(n_left[i])
+            if steps <= 0:
+                continue
+            pos = int(self.slot_pos[i])
+            pages = self._slot_pages[i]
+            borrowed = self._slot_shared[i]
+            for j in range(pos // ps, (pos + steps - 1) // ps + 1):
+                phys = pages.get(j)
+                if phys is None:
+                    new = self._alloc_page(i)
+                    if new is None:
+                        n_left[i] = max(j * ps - pos, 0)
+                        break
+                    pages[j] = new
+                    self._page_table[i, j] = new
+                    self._table_dirty = True
+                elif j in borrowed:
+                    if pool.refcount(phys) > 1:
+                        new = self._alloc_page(i)
+                        if new is None:
+                            n_left[i] = max(j * ps - pos, 0)
+                            break
+                        self.cache = self._page_copier(
+                            self.cache, jnp.int32(phys), jnp.int32(new))
+                        pool.release(phys)
+                        pool.cow_copies += 1
+                        pages[j] = new
+                        self._page_table[i, j] = new
+                    else:
+                        # sole holder: take ownership; stop advertising
+                        # the original tokens (content will diverge)
+                        pool.unpublish(phys)
+                    borrowed.discard(j)
+                    self._table_dirty = True
+        self._sync_table()
+        return n_left
+
+    def decode_k_headroom(self, k: int) -> int:
+        """Clamp a decode quantum to free-page headroom: the largest
+        k' <= k whose worst-case new-page demand across decodable rows
+        the pool can satisfy right now.  Never below 1 — the per-row
+        preflight clamps (and counts) rows a single step cannot map.
+        Dense engines return k unchanged; the SLO scheduler calls this
+        before sizing a quantum so memory pressure shrinks quanta instead
+        of surfacing as mid-quantum stalls."""
+        if not self.paged or k <= 1:
+            return max(int(k), 1)
+        assert self.pool is not None
+        ps = self.page_size
+        rows = []
+        for i, req in enumerate(self.slot_req):
+            if req is None or i in self._prefill:
+                continue
+            need = req.max_new_tokens + 1 - len(req.output)
+            room = self.max_len - 1 - int(self.slot_pos[i])
+            rows.append((int(self.slot_pos[i]),
+                         max(1, min(need, room)),
+                         self._slot_pages[i]))
+        free = self.pool.free_pages
+        best = 1
+        for kk in range(1, int(k) + 1):
+            demand = 0
+            for pos, budget, pages in rows:
+                steps = min(kk, budget)
+                demand += sum(
+                    1 for j in range(pos // ps, (pos + steps - 1) // ps + 1)
+                    if j not in pages)
+            if demand > free:
+                break
+            best = kk
+        return best
+
+    # ------------------------------------------------------------------
+    # Occupancy telemetry
+    # ------------------------------------------------------------------
+    @property
+    def cache_valid_tokens(self) -> int:
+        """Tokens resident on behalf of live requests (prefilled plus
+        decoded positions across occupied slots)."""
+        total = 0
+        for i, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            st = self._prefill.get(i)
+            total += st.done if st is not None else int(self.slot_pos[i])
+        return total
+
+    @property
+    def cache_resident_tokens(self) -> int:
+        """Token capacity the cache actually holds resident: dense rows
+        pin slots * max_len regardless of occupancy; paged residency is
+        allocated pages only, with shared pages counted once — the
+        dedup win prefix sharing buys."""
+        if self.paged:
+            assert self.pool is not None
+            return self.pool.used_pages * self.page_size
+        return self.slots * self.max_len
+
+    @property
+    def cache_utilization(self) -> float:
+        """Peak valid tokens / peak resident token capacity.  Dense
+        engines divide by the pinned slots * max_len; paged engines by
+        the page high-water mark — and because shared pages are resident
+        once but valid for every holder, prefix sharing can push this
+        past 1.0 (that IS the dedup win)."""
+        cap = (self.pool.peak_used * self.page_size
+               if self.paged and self.pool is not None
+               else self.slots * self.max_len)
+        return self.peak_cache_tokens / cap if cap else 0.0
+
+    def _note_occupancy(self) -> None:
+        self.peak_active_slots = max(self.peak_active_slots,
+                                     self.active_slots)
+        self.peak_cache_tokens = max(self.peak_cache_tokens,
+                                     self.cache_valid_tokens)
+
+    @property
+    def page_stats(self) -> dict:
+        """Pool counters for benches / cluster metrics ({} when dense)."""
+        if not self.paged:
+            return {}
+        assert self.pool is not None
+        p = self.pool
+        return {"page_size": self.page_size, "total_pages": p.total,
+                "used_pages": p.used_pages, "peak_used": p.peak_used,
+                "committed": p.committed, "shared_hits": p.shared_hits,
+                "cow_copies": p.cow_copies, "stalls": p.stalls,
+                "conflicts": p.conflicts,
+                "published": p.published_pages}
+
+    def _prefill_schedule(self, n: int, start: int = 0) -> collections.deque:
         """Chunk sizes for an ``n``-token prompt: fixed-size full chunks
         plus a power-of-two tail bucket (padded up), split further if the
         padding would write past ``max_len``.  Every size is a power of
         two <= ``prefill_chunk_len``, so the compiled-prefill shape set
-        is the bucket table, never the prompt-length distribution."""
+        is the bucket table, never the prompt-length distribution.
+        ``start`` skips tokens already resident (shared prefix pages):
+        the schedule covers [start, n) only."""
         out: collections.deque = collections.deque()
-        done = 0
+        done = start
         c = self.prefill_chunk_len
         while n - done >= c:
             out.append(c)
@@ -372,12 +883,19 @@ class ServingEngine:
         slot = self._free_slot()
         if slot is None:
             return False
+        start, row = 0, self._empty_row
+        if self.paged:
+            admitted = self._paged_admit(req, slot, n)
+            if admitted is None:
+                return False     # pool cannot commit (counted as conflict)
+            start, row = admitted
         self.slot_req[slot] = req
         self.slot_pos[slot] = n
         if self.chunked_prefill:
             self._prefill[slot] = _PrefillState(
-                req=req, row_cache=self._empty_row,
-                schedule=self._prefill_schedule(n))
+                req=req, row_cache=row,
+                schedule=self._prefill_schedule(n, start), done=start)
+            self._note_occupancy()
             if drain:
                 while not req.output:
                     self.prefill_step()
@@ -385,12 +903,19 @@ class ServingEngine:
         toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
         logits, row_cache = self._prefill_one(self.params, toks,
                                               self._empty_row)
-        self.cache = self._row_writer(self.cache, row_cache,
-                                      jnp.int32(slot))
+        if self.paged:
+            self.cache = self._paged_row_writer(
+                self.cache, row_cache, jnp.int32(slot),
+                jnp.asarray(self._write_table(slot)))
+            self._publish_slot_pages(slot, req)
+        else:
+            self.cache = self._row_writer(self.cache, row_cache,
+                                          jnp.int32(slot))
         first = int(jnp.argmax(logits[0]))      # prompt's first sampled token
         self.host_syncs += 1
         self.tokens_decoded += 1
         self.prefill_tokens += n
+        self._note_occupancy()
         req.output.append(first)
         return True
 
@@ -466,13 +991,20 @@ class ServingEngine:
         self.prefill_pad_tokens += c - valid
         finished = not st.schedule
         if finished:
-            self.cache = self._row_writer(self.cache, st.row_cache,
-                                          jnp.int32(slot))
+            if self.paged:
+                self.cache = self._paged_row_writer(
+                    self.cache, st.row_cache, jnp.int32(slot),
+                    jnp.asarray(self._write_table(slot)))
+                self._publish_slot_pages(slot, st.req)
+            else:
+                self.cache = self._row_writer(self.cache, st.row_cache,
+                                              jnp.int32(slot))
             first = int(jnp.argmax(logits[0]))   # the ONE sync per admission
             self.host_syncs += 1
             self.tokens_decoded += 1
             st.req.output.append(first)
             del self._prefill[slot]
+        self._note_occupancy()
         return PrefillQuantum(slot=slot, rid=st.req.rid, chunk=c,
                               tokens=valid, finished=finished)
 
@@ -535,6 +1067,13 @@ class ServingEngine:
             # limit) finishing instead of spinning with a zero budget
             n_left[i] = max(1, min(need, room))
             toks[i] = req.output[-1]
+        if self.paged:
+            cap = (1 if not fused else
+                   min(int(k), self.quantum_buckets[-1]))
+            n_left = self._paged_preflight(active,
+                                           np.minimum(n_left, cap))
+            if not any(n_left[i] > 0 for i in active):
+                return None      # every decodable row waits on a free page
         if not fused:
             # per-slot positions: each row decodes at its own absolute
             # position and attends under its own kv-valid horizon, so
@@ -578,11 +1117,14 @@ class ServingEngine:
             self.slot_pos[i] += took
             self.tokens_decoded += took
             handle.row_steps[req.rid] = took
+        self._note_occupancy()               # peak before finished rows free
+        for i in handle.active:
+            req = self.slot_req[i]
             if len(req.output) >= req.max_new_tokens + 1 or \
                     self.slot_pos[i] >= self.max_len - 1:
                 req.done = True
                 finished.append(req)
-                self.slot_req[i] = None
+                self.release_slot(i)
         return finished
 
     def step_quantum(self, k: int) -> list[Request]:

@@ -59,6 +59,10 @@ class Workload:
     prompt_len_spread: int = 0             # mixed-length prompts when > 0
     tiers: dict[str, str] | None = None    # tenant -> SLO tier name; None =
                                            # untiered legacy workload
+    shared_prefix_len: int = 0             # every prompt opens with the same
+                                           # shared_prefix_len tokens (system-
+                                           # prompt traffic: the paged engine's
+                                           # prefix index deduplicates them)
 
     @property
     def n_queries(self) -> int:
@@ -91,12 +95,14 @@ class Workload:
     def poisson(tenants: list[str], qps: float, n_queries: int, *,
                 prompt_len: int = 8, max_new_tokens: int = 4, seed: int = 0,
                 weights: list[float] | None = None,
-                prompt_len_spread: int = 0) -> "Workload":
+                prompt_len_spread: int = 0,
+                shared_prefix_len: int = 0) -> "Workload":
         arr = poisson_workload(tenants, qps, n_queries, seed=seed,
                                weights=weights)
         return Workload(arr, prompt_len=prompt_len,
                         max_new_tokens=max_new_tokens, seed=seed,
-                        prompt_len_spread=prompt_len_spread)
+                        prompt_len_spread=prompt_len_spread,
+                        shared_prefix_len=shared_prefix_len)
 
     @staticmethod
     def bursty(tenants: list[str], qps: float, n_queries: int, *,
@@ -104,6 +110,7 @@ class Workload:
                prompt_len: int = 8, max_new_tokens: int = 4, seed: int = 0,
                weights: list[float] | None = None,
                prompt_len_spread: int = 0,
+               shared_prefix_len: int = 0,
                tiers: dict[str, str] | None = None) -> "Workload":
         """Gamma-modulated Poisson arrivals (flash crowds at mean ``qps``
         offered load) — the heavy-traffic regime the paper targets."""
@@ -113,7 +120,8 @@ class Workload:
                                      weights=weights)
         return Workload(arr, prompt_len=prompt_len,
                         max_new_tokens=max_new_tokens, seed=seed,
-                        prompt_len_spread=prompt_len_spread, tiers=tiers)
+                        prompt_len_spread=prompt_len_spread,
+                        shared_prefix_len=shared_prefix_len, tiers=tiers)
 
     @staticmethod
     def diurnal(tenants: list[str], qps_peak: float, n_queries: int, *,
@@ -121,6 +129,7 @@ class Workload:
                 prompt_len: int = 8, max_new_tokens: int = 4, seed: int = 0,
                 weights: list[float] | None = None,
                 prompt_len_spread: int = 0,
+                shared_prefix_len: int = 0,
                 tiers: dict[str, str] | None = None) -> "Workload":
         """Sinusoidally-modulated arrivals (compressed diurnal cycle)."""
         arr = diurnal_workload(tenants, qps_peak, n_queries,
@@ -128,7 +137,8 @@ class Workload:
                                weights=weights)
         return Workload(arr, prompt_len=prompt_len,
                         max_new_tokens=max_new_tokens, seed=seed,
-                        prompt_len_spread=prompt_len_spread, tiers=tiers)
+                        prompt_len_spread=prompt_len_spread,
+                        shared_prefix_len=shared_prefix_len, tiers=tiers)
 
     @staticmethod
     def replay(arrivals: list[tuple[float, str]], **kw) -> "Workload":
@@ -323,6 +333,8 @@ class OnlineRuntime:
                           tier=wl.tier_of(tenant))
             if self.scheduler == "slo" and self.admission is not None:
                 entry = self.book.entry(rid)
+                pages_needed, pages_free = self.engine.admission_pages(
+                    req.prompt, wl.max_new_tokens)
                 decision = self.admission.decide(
                     now=now, entry=entry, spec=self.book.spec(entry.tier),
                     step_dt=self.step_dt,
@@ -330,7 +342,8 @@ class OnlineRuntime:
                     own_decode_steps=wl.max_new_tokens,
                     backlog_chunks=sum(
                         c for _, _, c in self.engine.prefill_queue()),
-                    slot_free=self.engine.active_slots < self.engine.slots)
+                    slot_free=self.engine.active_slots < self.engine.slots,
+                    pages_needed=pages_needed, pages_free=pages_free)
                 if decision == "shed":
                     self.shed += 1
                     shed_rids.add(rid)
@@ -373,6 +386,15 @@ class OnlineRuntime:
         the same records layout the simulator produces."""
         prompts = synth_prompts(wl.n_queries, wl.prompt_len,
                                 self.engine.cfg.vocab_size, wl.seed)
+        if wl.shared_prefix_len > 0:
+            # system-prompt traffic: every query opens with one common
+            # token run (deterministic per seed) — on a paged engine the
+            # prefix index turns these into refcounted shared pages
+            import numpy as np
+            spl = min(wl.shared_prefix_len, prompts.shape[1])
+            pre = np.random.default_rng(wl.seed + 0x9EF1).integers(
+                0, self.engine.cfg.vocab_size, spl)
+            prompts[:, :spl] = pre.astype(prompts.dtype)
         lens = wl.prompt_lengths()
         arrivals = collections.deque(
             (t, tenant, rid) for rid, (t, tenant)
@@ -511,4 +533,6 @@ class OnlineRuntime:
 
         return summarize(self.records, wl.qps,
                          self.conflicts / max(wl.n_queries, 1), busy, alloc,
-                         shed=self.shed, deferred=self.deferred)
+                         shed=self.shed, deferred=self.deferred,
+                         peak_cache_tokens=self.engine.peak_cache_tokens,
+                         cache_utilization=self.engine.cache_utilization)

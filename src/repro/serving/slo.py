@@ -115,10 +115,15 @@ def pick_quantum(engine, book: DeadlineBook, now: float, step_dt: float,
         dl = e.deadline if e is not None else math.inf
         return (dl, toks_left, slot)
 
+    # memory is a scheduling dimension on paged engines: a quantum longer
+    # than the free-page headroom would stall rows mid-quantum, so clamp
+    # k up front (dense engines pass k through unchanged)
+    headroom = getattr(engine, "decode_k_headroom", None)
+    k_mem = headroom(k_max) if callable(headroom) else k_max
     if not decode:
         return ("prefill", min(prefill, key=pkey)[0])
     if not prefill:
-        return ("decode", k_max)
+        return ("decode", k_mem)
     best_p = min(prefill, key=pkey)
     best_d = min(decode, key=dkey)
     p_dl = pkey(best_p)[0]
@@ -127,7 +132,7 @@ def pick_quantum(engine, book: DeadlineBook, now: float, step_dt: float,
     # decode wins now, but end the quantum before the tightest pending
     # TTFT deadline comes due (each chunk/step costs ~step_dt)
     slack_steps = int((p_dl - now) / step_dt) - best_p[2]
-    return ("decode", max(1, min(k_max, slack_steps)))
+    return ("decode", max(1, min(k_mem, slack_steps)))
 
 
 @dataclasses.dataclass
@@ -147,9 +152,19 @@ class AdmissionController:
 
     def decide(self, *, now: float, entry: SloEntry, spec: TierSpec,
                step_dt: float, own_chunks: int, own_decode_steps: int,
-               backlog_chunks: int, slot_free: bool) -> str:
-        """One of ``"admit"`` / ``"defer"`` / ``"shed"``."""
+               backlog_chunks: int, slot_free: bool, pages_needed: int = 0,
+               pages_free: int | None = None) -> str:
+        """One of ``"admit"`` / ``"defer"`` / ``"shed"``.
+
+        ``pages_needed`` / ``pages_free`` make memory an admission
+        dimension on paged engines: a request whose worst-case page
+        commitment (net of shareable prefix pages) exceeds the pool's
+        uncommitted surplus defers — occupancy-slot *and* page-pool
+        exhaustion are both counted, never silent.  Dense engines pass
+        ``pages_free=None`` (no page gate)."""
         if not slot_free:
+            return "defer"
+        if pages_free is not None and pages_needed > pages_free:
             return "defer"
         est_steps = backlog_chunks + own_chunks + own_decode_steps
         est_finish = now + est_steps * step_dt

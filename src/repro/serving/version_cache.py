@@ -31,6 +31,13 @@ deliberately does NOT donate: the engine reuses one pristine cache row
 for every admission, and donating it would invalidate that row after the
 first prefill.
 
+Paged engines need no special handling here: the per-slot ``page_table``
+rides *inside* the cache pytree, so every executable this cache holds is
+keyed on the paged layout's shapes (pool + table) exactly like any other
+cache leaf — a dense and a paged engine of the same model simply trace
+distinct executables, and :meth:`ServingEngine.warmup` prebuilds the
+paged gather/scatter helpers alongside these entries.
+
 ``traces`` counts *actual* jax traces (the counter increments inside the
 traced body, so it fires on first-call tracing and any shape-driven
 retrace, and stays flat on cache hits) — tests assert a full level sweep

@@ -14,7 +14,13 @@ queries-under-QoS (``qps_at_qos``) of the FIFO baseline at equal
 offered load, with strict tier ordering (interactive qos_rate >=
 standard >= batch) and token-identical per-request outputs across the
 two schedules — all three strict, because the slo serve runs in
-deterministic virtual time.  Run from the repo root:
+deterministic virtual time.  The ``paged`` section gates the paged KV
+cache the same way (also virtual-time exact): >= PAGED_GAIN_MIN x the
+dense engine's peak concurrent requests at an equal device memory
+budget, token-identical outputs, zero post-warmup retraces, a counted
+shed/defer response to page-pool exhaustion, and >= 1 page deduplicated
+by cross-request prefix sharing in the paged cluster.  Run from the
+repo root:
 
     python -m benchmarks.bench_online_serving --tiny
     python tools/check_bench.py
@@ -45,6 +51,12 @@ THROUGHPUT_TOLERANCE = 0.10
 # queries-under-QoS on the bursty overload workload.
 SLO_GAIN_MIN = 1.3
 SLO_TIER_ORDER = ("interactive", "standard", "batch")
+
+# The paged section also serves in virtual time, so its gates are exact.
+# The ISSUE-7 acceptance floor: at an equal device memory budget the
+# paged KV cache must sustain at least this multiple of the dense
+# engine's peak concurrent requests, with token-identical outputs.
+PAGED_GAIN_MIN = 1.5
 
 
 def check(path: pathlib.Path) -> list[str]:
@@ -95,6 +107,7 @@ def check(path: pathlib.Path) -> list[str]:
                 "mixed-length workload — the benchmark is not actually "
                 "exercising the length spread")
     errors.extend(check_slo(data.get("slo")))
+    errors.extend(check_paged(data.get("paged")))
     return errors
 
 
@@ -133,6 +146,51 @@ def check_slo(s: dict | None) -> list[str]:
     return errors
 
 
+def check_paged(p: dict | None) -> list[str]:
+    """The paged-KV-cache gates (all strict: virtual time)."""
+    if not p or "dense" not in p or "paged" not in p:
+        return ["BENCH_serving.json has no paged section (stale file?) — "
+                "rerun `python -m benchmarks.bench_online_serving --tiny`"]
+    errors = []
+    budget = p["memory_budget_tokens"]
+    for arm in ("dense", "paged"):
+        if p[arm]["peak_resident_tokens"] > budget:
+            errors.append(
+                f"{arm} arm exceeded the device memory budget: "
+                f"{p[arm]['peak_resident_tokens']} resident tokens > "
+                f"{budget} — the comparison is not at equal memory")
+    gain = p["paged"]["peak_concurrent"] \
+        / max(p["dense"]["peak_concurrent"], 1)
+    if not gain >= PAGED_GAIN_MIN:
+        errors.append(
+            f"paged KV cache lost its concurrency win at equal memory: "
+            f"{p['paged']['peak_concurrent']} peak concurrent vs dense's "
+            f"{p['dense']['peak_concurrent']} "
+            f"(need >= {PAGED_GAIN_MIN}x on a {budget}-token budget)")
+    if not p.get("token_identical", False):
+        errors.append(
+            "dense and paged engines produced different per-request token "
+            "streams — the page table must change where KV lives, never "
+            "what a request computes")
+    if p["paged"]["post_warmup_traces"] != 0:
+        errors.append(
+            f"paged engine retraced after warmup: "
+            f"{p['paged']['post_warmup_traces']} post-warmup traces "
+            "(paged gather/scatter paths must be fully warmed)")
+    tiny = p.get("tiny_pool", {})
+    if tiny.get("shed", 0) + tiny.get("deferred", 0) <= 0:
+        errors.append(
+            "page-pool exhaustion produced no shed/deferred admissions — "
+            "memory pressure must surface as a counted scheduling "
+            "decision, never a silent stall")
+    cluster = p.get("cluster", {})
+    if cluster.get("shared_hits", 0) < 1:
+        errors.append(
+            "cross-request prefix sharing deduplicated zero pages across "
+            "co-located tenants — the prefix index is not being hit")
+    return errors
+
+
 def main() -> int:
     path = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT
     errors = check(path)
@@ -159,6 +217,17 @@ def main() -> int:
               + "/".join(f"{t}={rates[t]}" for t in SLO_TIER_ORDER
                          if t in rates)
               + f"; token_identical={s['token_identical']})")
+    if data.get("paged"):
+        p = data["paged"]
+        print(f"bench gate: paged KV cache sustains "
+              f"{p['concurrency_gain']}x dense's peak concurrency "
+              f"({p['paged']['peak_concurrent']} vs "
+              f"{p['dense']['peak_concurrent']} requests on a "
+              f"{p['memory_budget_tokens']}-token budget; "
+              f"shared_hits={p['paged']['page_stats']['shared_hits']}; "
+              f"deferred={p['tiny_pool']['deferred']}; "
+              f"cluster_shared={p['cluster']['shared_hits']}; "
+              f"token_identical={p['token_identical']})")
     return 0
 
 

@@ -52,6 +52,22 @@ Sections:
                                    page-pool exhaustion, and >= 1 page
                                    deduplicated by cross-request prefix
                                    sharing in a 2-tenant paged cluster
+  * measured/proxy_rms_ratio       closing the adaptive-compilation loop:
+                                   sliding-window RMS residual of the
+                                   pressure proxy while serving on
+                                   MEASURED per-quantum wall-time counters
+                                   (engine CounterBank + online RLS
+                                   re-fit), as a ratio over the
+                                   oracle-calibration residual — CI gates
+                                   it <= 1.5x
+  * measured/ladder_gain_x         qps_at_qos of an engine running the
+                                   autotuned tile ladder
+                                   (tools/autotune_ladder.py ->
+                                   search_tile_ladder) over the fixed
+                                   DEFAULT_LEVEL_TILES table on the same
+                                   virtual-time workload (CI gates >= 1x
+                                   exact, plus zero post-warmup retraces
+                                   on the ladder arm)
   * slo/<sched>_qps_at_qos         the headline metric: queries served
                                    UNDER their SLO deadline per second,
                                    on a bursty (Gamma-modulated Poisson)
@@ -96,7 +112,8 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_serving.json"
 
 
-def _engine(plans, *, batch_slots=2, max_len=32, **kw):
+def _engine(plans, *, batch_slots=2, max_len=32, use_version_sets=True,
+            **kw):
     import jax
 
     from repro.configs import get_reduced_config
@@ -106,9 +123,9 @@ def _engine(plans, *, batch_slots=2, max_len=32, **kw):
     cfg = get_reduced_config("gemma-2b")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    vs = engine_version_sets(plans) if use_version_sets else None
     return ServingEngine(cfg, params, batch_slots=batch_slots,
-                         max_len=max_len,
-                         version_sets=engine_version_sets(plans), **kw)
+                         max_len=max_len, version_sets=vs, **kw)
 
 
 def online_policies(plans):
@@ -499,11 +516,101 @@ def paged_serving(plans, *, n_queries: int = 20) -> dict:
     return section
 
 
+def measured_loop(plans, *, n_queries: int = N_QUERIES) -> dict:
+    """Closing the adaptive-compilation loop: serve on MEASURED counters
+    (the engine's per-quantum wall-time bank) with the online RLS proxy
+    re-fit in the loop, and run the autotuned tile ladder against the
+    fixed ``DEFAULT_LEVEL_TILES`` table.
+
+    Arm 1 (proxy): one bursty serve with ``counter_source="measured"``.
+    While the bank is cold the runtime falls back to oracle-synthesized
+    samples (counted in ``counter_sources``); once warm, samples are
+    re-expressed from measured slowdowns and every poll feeds the RLS
+    window.  The reported residual is the proxy's sliding-window RMS at
+    serve end, gated as a ratio over the offline calibration residual.
+
+    Arm 2 (ladder): two identically-warmed engines WITHOUT version_sets
+    — one on the hand-written level table, one on the
+    ``search_tile_ladder`` artifact — replay the same workload in
+    virtual time, so the qps_at_qos comparison is exact, and the ladder
+    arm must finish its level sweep with zero post-warmup retraces."""
+    from benchmarks.hillclimb import search_tile_ladder
+    from repro.configs.paper_suite import paper_models
+    from repro.core.interference import calibrate_proxy
+
+    section: dict = {}
+
+    # -- arm 1: synthesized-vs-measured proxy error -----------------------
+    proxy = calibrate_proxy(HW)[0]
+    oracle_rms = float(proxy.base_rms)
+    wl = Workload.bursty(TENANTS, 300.0, n_queries, prompt_len=6,
+                         max_new_tokens=4, seed=9)
+    engine = _engine(plans)
+    engine.warmup(prompt_lens=(wl.prompt_len,))
+    runtime = OnlineRuntime(engine, VeltairPolicy(HW, proxy=proxy), plans,
+                            HW, counter_source="measured")
+    t0 = time.time()
+    m = runtime.serve(wl)
+    wall = time.time() - t0
+    measured_rms = float(m.proxy_rms_error)
+    section["proxy"] = {
+        "oracle_rms": round(oracle_rms, 5),
+        "measured_rms": round(measured_rms, 5),
+        "rms_ratio": round(measured_rms / max(oracle_rms, 1e-9), 3),
+        "refits": int(m.refit_count),
+        "rls_updates": int(proxy.rls_updates),
+        "polls": {k: int(v) for k, v in runtime.counter_sources.items()},
+        "bank_observations": int(engine.counter_bank.observations),
+        "qos_rate": round(m.qos_rate, 3),
+        "wall_s": round(wall, 4),
+    }
+    emit("measured/proxy_rms_ratio", section["proxy"]["rms_ratio"],
+         f"oracle_rms={section['proxy']['oracle_rms']};"
+         f"measured_rms={section['proxy']['measured_rms']};"
+         f"refits={section['proxy']['refits']};"
+         f"polls={section['proxy']['polls']}")
+
+    # -- arm 2: autotuned ladder vs fixed level table ---------------------
+    pm = paper_models()["resnet50"]
+    layer = max(pm.layers, key=lambda l: l.flops)
+    spec = search_tile_ladder(layer, HW)
+    lwl = Workload.bursty(TENANTS, 300.0, n_queries, prompt_len=6,
+                          max_new_tokens=4, seed=11)
+    section["ladder"] = {"spec_name": spec.name,
+                         "distinct_tables": len(spec.tile_tables())}
+    for name, kw in (("fixed", {}), ("autotuned", {"ladder": spec})):
+        eng = _engine(plans, use_version_sets=False, **kw)
+        eng.warmup(prompt_lens=(lwl.prompt_len,))
+        traces0 = eng.version_cache.traces
+        rt = OnlineRuntime(eng, VeltairPolicy(HW), plans, HW)
+        t0 = time.time()
+        lm = rt.serve(lwl)
+        wall = time.time() - t0
+        section["ladder"][name] = {
+            "qps_at_qos": round(lm.qps_at_qos, 1),
+            "qos_rate": round(lm.qos_rate, 3),
+            "served": int(lm.n_queries),
+            "post_warmup_traces": int(eng.version_cache.traces - traces0),
+            "level_switches": int(eng.level_switches),
+            "wall_s": round(wall, 4),
+        }
+    section["ladder"]["gain_qps_at_qos"] = round(
+        section["ladder"]["autotuned"]["qps_at_qos"]
+        / max(section["ladder"]["fixed"]["qps_at_qos"], 1e-9), 3)
+    emit("measured/ladder_gain_x", section["ladder"]["gain_qps_at_qos"],
+         f"fixed={section['ladder']['fixed']['qps_at_qos']};"
+         f"autotuned={section['ladder']['autotuned']['qps_at_qos']};"
+         f"traces={section['ladder']['autotuned']['post_warmup_traces']};"
+         f"tables={section['ladder']['distinct_tables']}")
+    return section
+
+
 def write_bench_json(quantum: dict, prefill: dict, slo: dict, paged: dict,
-                     mode: str) -> None:
+                     measured: dict, mode: str) -> None:
     BENCH_JSON.write_text(json.dumps(
         {"bench": "online_serving", "mode": mode, "quantum": quantum,
-         "prefill": prefill, "slo": slo, "paged": paged},
+         "prefill": prefill, "slo": slo, "paged": paged,
+         "measured": measured},
         indent=2) + "\n")
     print(f"# wrote {BENCH_JSON}", flush=True)
 
@@ -514,22 +621,24 @@ def run_all():
     level_switch_cost(plans)
     colocation_policies()
     write_bench_json(quantum_dispatch(plans), prefill_dispatch(plans),
-                     slo_scheduling(), paged_serving(plans), "full")
+                     slo_scheduling(), paged_serving(plans),
+                     measured_loop(plans), "full")
 
 
 def run_tiny():
     """CI-sized run: the quantum fused-vs-per-step comparison, the
-    mixed-length prefill section, the SLO scheduling comparison and the
-    paged-vs-dense memory comparison (all CI-gated).  More repeats than
-    the full run for the wall-clock quantum section — the CI gate
-    compares those numbers on noisy shared runners, so best-of needs
-    extra samples; the slo and paged sections are virtual-time
-    deterministic and need none."""
+    mixed-length prefill section, the SLO scheduling comparison, the
+    paged-vs-dense memory comparison and the measured-counter loop (all
+    CI-gated).  More repeats than the full run for the wall-clock
+    quantum section — the CI gate compares those numbers on noisy shared
+    runners, so best-of needs extra samples; the slo, paged and measured
+    sections are virtual-time deterministic and need none."""
     plans = build_paper_plans(TENANTS, HW)
     write_bench_json(quantum_dispatch(plans, n_queries=16, repeats=5),
                      prefill_dispatch(plans, n_queries=12),
                      slo_scheduling(n_queries=36),
-                     paged_serving(plans, n_queries=16), "tiny")
+                     paged_serving(plans, n_queries=16),
+                     measured_loop(plans, n_queries=16), "tiny")
 
 
 if __name__ == "__main__":

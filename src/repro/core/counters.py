@@ -1,0 +1,154 @@
+"""Measured performance counters from per-quantum wall times.
+
+This is the measurement half of the adaptive-compilation loop.  The
+oracle path (``read_counters(source="oracle")``) synthesizes counter
+values from co-runner demand sums — fine for the simulator and for
+calibration, but it means the serving loop's sensor is simulated.  A
+:class:`CounterBank` closes that gap: the engine timestamps every
+dispatch quantum (``ServingEngine.begin_quantum``/``finish_quantum``
+and the finishing prefill chunk — the points with a real device->host
+sync, so the wall time covers device work, not dispatch overhead), and
+the bank turns those (quantum kind, K-bucket, tile config, co-runner
+count) observations into a per-engine *slowdown* estimate:
+
+    slowdown = median(recent wall) / baseline wall        (per shape key)
+
+where the baseline is the fastest wall ever observed for that exact
+(kind, bucket, tiles) key — the uncontended floor.  The fair-share cost
+model says memory time under co-runner bandwidth demand ``bw`` scales by
+``(1 + bw)``, and level 1.0 pins ``bw = Interference.BW_AT_1`` — so the
+measured slowdown maps back to a pressure level as
+
+    level = clip((slowdown - 1) / BW_AT_1, 0, 1)
+
+and :meth:`sample` re-expresses that pressure in counter units (the
+deterministic response curve of ``synthesize_counters``), producing a
+:class:`~repro.core.interference.CounterSample` with ``source=
+"measured"`` and no oracle ``truth`` — the same transport format the
+calibrated :class:`~repro.core.interference.LinearProxy` consumes, so
+the whole decision path downstream of the sensor is unchanged.
+
+Attribution contract (see ``tests/test_measured_counters.py``): the
+engine stamps ``t0`` *after* version-cache lookup/AOT-compile and
+*after* the scheduler's ``set_interference_level`` switch, and skips the
+observation entirely when a jax trace happened inside the timed span —
+host-side scheduling and compile time are already charged by the
+runtimes (``compile_time_s``) and must never double-count into the
+measured counters.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.core.cost_model import HardwareSpec, Interference
+from repro.core.interference import CounterSample, synthesize_counters
+
+# fair-share model: at level 1.0 the co-runner bandwidth demand is
+# BW_AT_1, stretching memory time by (1 + BW_AT_1) — i.e. a slowdown of
+# (1 + BW_AT_1) over the uncontended floor maps to level 1.0
+SLOWDOWN_AT_1 = Interference.BW_AT_1
+
+WINDOW = 64            # recent observations pooled per slowdown estimate
+MIN_KEY_OBS = 2        # observations before a key's floor is trusted
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantumObservation:
+    """One timed dispatch quantum (as recorded by the engine)."""
+    kind: str            # "decode" | "prefill"
+    bucket: int          # K-bucket (decode) / padded chunk size (prefill)
+    tiles: tuple         # version-cache tiles key of the active version
+    wall_s: float        # measured wall time, sync to sync
+    tokens: int = 0      # tokens the quantum produced/consumed
+    co_runners: int = 0  # co-resident active slots elsewhere (observability)
+    t: float = 0.0       # virtual time of the observation
+
+    @property
+    def key(self) -> tuple:
+        return (self.kind, self.bucket, self.tiles)
+
+
+class CounterBank:
+    """Sliding-window slowdown estimator over timed dispatch quanta.
+
+    One bank per engine.  ``observe`` is called by the engine at every
+    synced quantum boundary; ``sample`` is called by the runtime's
+    counter poll (through ``read_counters(source="measured")``) and
+    returns None while the bank is cold — no key has both a trusted
+    baseline and a recent observation — letting the caller fall back to
+    the oracle synthesizer for that poll."""
+
+    def __init__(self, *, window: int = WINDOW,
+                 min_key_obs: int = MIN_KEY_OBS):
+        self.window = int(window)
+        self.min_key_obs = int(min_key_obs)
+        self._floor: dict[tuple, float] = {}    # key -> fastest wall seen
+        self._count: dict[tuple, int] = {}      # key -> observations
+        self._recent: collections.deque = collections.deque(
+            maxlen=self.window)
+        self.observations = 0
+
+    # ------------------------------------------------------------------
+    def observe(self, kind: str, bucket: int, tiles: tuple,
+                wall_s: float, *, tokens: int = 0, co_runners: int = 0,
+                t: float = 0.0) -> QuantumObservation:
+        """Record one timed quantum; returns the stored observation."""
+        obs = QuantumObservation(kind=str(kind), bucket=int(bucket),
+                                 tiles=tuple(tiles), wall_s=float(wall_s),
+                                 tokens=int(tokens),
+                                 co_runners=int(co_runners), t=float(t))
+        if obs.wall_s <= 0.0:
+            return obs
+        key = obs.key
+        floor = self._floor.get(key)
+        if floor is None or obs.wall_s < floor:
+            self._floor[key] = obs.wall_s
+        self._count[key] = self._count.get(key, 0) + 1
+        self._recent.append(obs)
+        self.observations += 1
+        return obs
+
+    @property
+    def last(self) -> QuantumObservation | None:
+        return self._recent[-1] if self._recent else None
+
+    # ------------------------------------------------------------------
+    def slowdown(self) -> float | None:
+        """Median wall/floor ratio over the recent window (>= 1.0 by
+        construction), or None while cold.  The median is the robustness
+        knob: one GC pause or noisy-neighbor spike must not swing the
+        level decision."""
+        ratios = [obs.wall_s / self._floor[obs.key]
+                  for obs in self._recent
+                  if self._count.get(obs.key, 0) >= self.min_key_obs]
+        if not ratios:
+            return None
+        return float(np.median(ratios))
+
+    def level(self) -> float | None:
+        s = self.slowdown()
+        if s is None:
+            return None
+        return float(np.clip((s - 1.0) / SLOWDOWN_AT_1, 0.0, 1.0))
+
+    def pressure(self) -> Interference | None:
+        """Measured pressure estimate (the RLS target online)."""
+        lvl = self.level()
+        if lvl is None:
+            return None
+        return Interference.from_level(lvl)
+
+    def sample(self, hw: HardwareSpec, now: float) -> CounterSample | None:
+        """The measured counter poll: re-express the bank's pressure in
+        counter units (deterministic response curve — the measurement
+        noise is already in the wall times) as a ``source="measured"``
+        sample, or None while cold."""
+        itf = self.pressure()
+        if itf is None:
+            return None
+        values = synthesize_counters(hw, itf, None, noise_scale=0.0)
+        return CounterSample(values=values, t=now, truth=None,
+                             source="measured")

@@ -17,6 +17,7 @@ of variance, Fig. 11).  We reproduce both sides:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import numpy as np
@@ -24,6 +25,14 @@ import numpy as np
 from repro.core.cost_model import HardwareSpec, Interference
 
 SOON_FINISH_FRACTION = 0.10   # paper: ignore blocks with <10% latency left
+
+# Online proxy re-fit (sliding-window recursive least squares): the proxy
+# keeps tracking the counter->pressure mapping as traffic drifts away from
+# the offline calibration distribution.
+RLS_WINDOW = 128      # (counter, pressure) pairs kept for window refits
+RLS_FORGET = 0.97     # exponential forgetting factor (per update)
+DRIFT_WINDOW = 16     # residuals pooled for the drift detector
+DRIFT_SPIKE = 3.0     # recent RMS > spike * calibration RMS => refit
 
 
 @dataclasses.dataclass
@@ -74,24 +83,50 @@ class CounterSample:
     ``truth`` is the ground-truth pressure the counters were synthesized
     from — it exists for calibration and proxy-accuracy tests ONLY and
     must never feed a scheduling decision (the runtime's level decisions
-    flow through :class:`LinearProxy`, like the real system's)."""
+    flow through :class:`LinearProxy`, like the real system's).
+
+    ``source`` records which sensor produced the sample: ``"oracle"``
+    (synthesized from co-runner demand sums — the simulator/test path)
+    or ``"measured"`` (derived from per-quantum wall times by a
+    :class:`~repro.core.counters.CounterBank`; ``truth`` is None there,
+    because a real system has no oracle)."""
     values: np.ndarray
     t: float
     truth: Interference | None = None
+    source: str = "oracle"
 
 
 def read_counters(hw: HardwareSpec, victim: int,
                   demands: list[RunningDemand], now: float,
                   rng: np.random.Generator, *,
-                  exclude_soon_done: bool = True) -> CounterSample:
-    """Poll the (synthesized) performance counters as seen by ``victim``.
+                  exclude_soon_done: bool = True,
+                  source: str = "oracle",
+                  bank=None) -> CounterSample:
+    """Poll the performance counters as seen by ``victim``.
 
-    This is the online runtime's sensor: the true co-runner pressure is
-    only used to decide what the counters *would read* — the proxy then
-    maps the noisy counter values back to a pressure estimate, so the
-    scheduler experiences proxy error exactly like the deployed system.
-    ``victim=-1`` matches no running demand, i.e. the caller observes the
-    full co-runner pressure (an engine asking "what hits me right now")."""
+    ``source="oracle"`` (default — the simulator/test path, and exactly
+    the pre-measurement behavior): the true co-runner pressure decides
+    what the counters *would read*; the proxy then maps the noisy counter
+    values back to a pressure estimate, so the scheduler experiences
+    proxy error exactly like the deployed system.  ``victim=-1`` matches
+    no running demand, i.e. the caller observes the full co-runner
+    pressure (an engine asking "what hits me right now").
+
+    ``source="measured"``: the sample comes from ``bank`` (a
+    :class:`~repro.core.counters.CounterBank` fed by the engine's
+    per-quantum wall times) — no oracle is consulted and ``truth`` is
+    None.  A cold bank (no usable observations yet) falls back to the
+    oracle synthesizer for this poll; the returned sample is labelled
+    ``"oracle"`` so callers can count how often the fallback fired."""
+    if source not in ("oracle", "measured"):
+        raise ValueError(f"counter source {source!r} not in "
+                         "('oracle', 'measured')")
+    if source == "measured":
+        if bank is None:
+            raise ValueError("source='measured' needs a CounterBank")
+        sample = bank.sample(hw, now)
+        if sample is not None:
+            return sample
     truth = pressure_on(victim, demands, now,
                         exclude_soon_done=exclude_soon_done)
     values = synthesize_counters(hw, truth, rng)
@@ -99,20 +134,33 @@ def read_counters(hw: HardwareSpec, victim: int,
 
 
 def synthesize_counters(hw: HardwareSpec, itf: Interference,
-                        rng: np.random.Generator) -> np.ndarray:
+                        rng: np.random.Generator | None,
+                        noise_scale: float = 1.0) -> np.ndarray:
     """What the perf counters would read under pressure ``itf``.
 
     L3-related counters respond to the shared-resource pressure (that is the
     paper's PCA finding); IPC responds inversely; the rest are distractors
-    with small variance."""
+    with small variance.  ``noise_scale=0.0`` gives the deterministic
+    response curve (the CounterBank uses it to express a *measured*
+    pressure in counter units — the transport format the proxy consumes —
+    without injecting synthetic sensor noise); ``rng`` may then be None."""
     c = min(itf.cache / Interference.CACHE_AT_1, 1.0)
     b = min(itf.bw / Interference.BW_AT_1, 1.0)
-    miss = 0.08 + 0.85 * c + rng.normal(0, 0.015)
-    acc = 0.20 + 0.75 * b + rng.normal(0, 0.02)
-    ipc = 2.2 - 1.1 * max(c, b) + rng.normal(0, 0.05)
-    flop = 0.6 + rng.normal(0, 0.02)
-    branch = 0.05 + rng.normal(0, 0.005)
-    stalls = 0.1 + 0.05 * itf.bw + rng.normal(0, 0.01)
+    if noise_scale == 0.0 or rng is None:
+        eps = np.zeros(6)
+    else:
+        eps = noise_scale * np.array([rng.normal(0, 0.015),
+                                      rng.normal(0, 0.02),
+                                      rng.normal(0, 0.05),
+                                      rng.normal(0, 0.02),
+                                      rng.normal(0, 0.005),
+                                      rng.normal(0, 0.01)])
+    miss = 0.08 + 0.85 * c + eps[0]
+    acc = 0.20 + 0.75 * b + eps[1]
+    ipc = 2.2 - 1.1 * max(c, b) + eps[2]
+    flop = 0.6 + eps[3]
+    branch = 0.05 + eps[4]
+    stalls = 0.1 + 0.05 * itf.bw + eps[5]
     return np.array([miss, acc, ipc, flop, branch, stalls])
 
 
@@ -125,12 +173,31 @@ class LinearProxy:
 
     ``predict`` returns the scalar level (for reporting / Fig. 11b);
     ``predict_interference`` the per-resource pressures the scheduler
-    consumes."""
+    consumes.
+
+    Online re-fit: :meth:`rls_update` feeds one (counter sample, realized
+    pressure) pair through a forgetting-factor recursive-least-squares
+    step, so the proxy tracks traffic drift away from the offline
+    calibration distribution.  A drift detector watches the residual
+    stream: when the recent residual RMS spikes past ``DRIFT_SPIKE`` x
+    the calibration-time RMS, the proxy is batch-refit on its sliding
+    window (``refit_count`` counts these; ``rms_error`` reports the
+    current window residual RMS — both surfaced in
+    ``ServingMetrics.proxy_rms_error``/``refit_count``)."""
 
     def __init__(self):
         self.w = np.zeros((2, 2))
         self.b = np.zeros(2)
         self.r2 = float("nan")
+        # online (RLS) state, lazily seeded from (w, b) on first update
+        self._theta: np.ndarray | None = None     # (3, 2) stacked [W; b]
+        self._P: np.ndarray | None = None         # (3, 3) inverse covariance
+        self._win: collections.deque = collections.deque(maxlen=RLS_WINDOW)
+        self._residuals: collections.deque = collections.deque(
+            maxlen=RLS_WINDOW)
+        self.base_rms = float("nan")   # calibration-time residual RMS
+        self.refit_count = 0           # drift-triggered window refits
+        self.rls_updates = 0           # online pairs consumed
 
     def fit(self, counters: np.ndarray,
             pressures: np.ndarray) -> "LinearProxy":
@@ -143,7 +210,81 @@ class LinearProxy:
         ss_res = float(np.sum((pressures - pred) ** 2))
         ss_tot = float(np.sum((pressures - pressures.mean(0)) ** 2)) or 1.0
         self.r2 = 1.0 - ss_res / ss_tot
+        resid = np.linalg.norm(pressures - pred, axis=1)
+        self.base_rms = float(np.sqrt(np.mean(resid ** 2)))
+        self._theta = None             # re-seed RLS from the fresh solution
+        self._P = None
+        self._win.clear()
+        self._residuals.clear()
         return self
+
+    # -- online re-fit -----------------------------------------------------
+    @property
+    def rms_error(self) -> float:
+        """Residual RMS over the sliding window (nan before any update)."""
+        if not self._residuals:
+            return float("nan")
+        r = np.asarray(self._residuals)
+        return float(np.sqrt(np.mean(r ** 2)))
+
+    @staticmethod
+    def _target(pressure) -> np.ndarray:
+        if isinstance(pressure, Interference):
+            return np.array([pressure.cache, pressure.bw], dtype=float)
+        return np.asarray(pressure, dtype=float)[:2]
+
+    def rls_update(self, counters: np.ndarray, pressure) -> float:
+        """One sliding-window RLS step on a (counters, realized pressure)
+        pair.  ``pressure`` is an :class:`Interference` or a (cache, bw)
+        array — the sample's oracle truth offline, the CounterBank's
+        measured pressure online.  Returns the pre-update residual norm
+        (the surprise this pair carried)."""
+        x = np.array([float(counters[0]), float(counters[1]), 1.0])
+        y = self._target(pressure)
+        if self._theta is None:
+            self._theta = np.vstack([self.w.T, self.b])
+            self._P = np.eye(3) * 100.0
+        resid = y - self._theta.T @ x
+        px = self._P @ x
+        denom = RLS_FORGET + float(x @ px)
+        self._theta = self._theta + np.outer(px / denom, resid)
+        self._P = (self._P - np.outer(px, px) / denom) / RLS_FORGET
+        self.w, self.b = self._theta[:2].T, self._theta[2]
+        self._win.append((x, y))
+        err = float(np.linalg.norm(resid))
+        self._residuals.append(err)
+        self.rls_updates += 1
+        # drift detection: a sustained residual spike means the counter->
+        # pressure mapping moved faster than the forgetting factor tracks
+        if len(self._residuals) >= DRIFT_WINDOW:
+            recent = np.asarray(self._residuals)[-DRIFT_WINDOW:]
+            recent_rms = float(np.sqrt(np.mean(recent ** 2)))
+            floor = max(self.base_rms, 1e-3) if np.isfinite(self.base_rms) \
+                else 1e-3
+            if recent_rms > DRIFT_SPIKE * floor:
+                self.refit_window()
+        return err
+
+    def refit_window(self) -> None:
+        """Batch least-squares over the sliding window (the drift
+        response): jump the model to the new regime instead of waiting
+        for the forgetting factor to wash the old one out."""
+        if len(self._win) < 4:
+            return
+        xs = np.array([x for x, _ in self._win])
+        ys = np.array([y for _, y in self._win])
+        sol, *_ = np.linalg.lstsq(xs, ys, rcond=None)
+        self.w, self.b = sol[:2].T, sol[2]
+        self._theta = sol
+        self._P = np.eye(3) * 100.0
+        self.refit_count += 1
+        # the post-refit residuals define the new normal: both the live
+        # window and the drift floor reset, so one regime change triggers
+        # one refit, not one per subsequent sample
+        resid = np.linalg.norm(ys - xs @ sol, axis=1)
+        self._residuals.clear()
+        self._residuals.extend(float(r) for r in resid[-DRIFT_WINDOW:])
+        self.base_rms = max(float(np.sqrt(np.mean(resid ** 2))), 1e-3)
 
     def predict_interference(self, counters: np.ndarray) -> Interference:
         c2 = np.asarray(counters[:2], dtype=float)

@@ -108,6 +108,11 @@ class ServingMetrics:
                                     # dense pins slots*max_len, paged pins
                                     # allocated pages (shared pages counted
                                     # once, so sharing can push this past 1)
+    proxy_rms_error: float = float("nan")  # sliding-window RMS residual of
+                                    # the policy's pressure proxy (NaN for
+                                    # policies without one / oracle runs
+                                    # that never feed it)
+    refit_count: int = 0            # drift-triggered online proxy refits
     per_tier: dict[str, TierMetrics] = dataclasses.field(default_factory=dict)
 
 
@@ -127,7 +132,9 @@ def summarize(records: list[QueryRecord], qps_offered: float,
               conflict_rate: float, busy_unit_time: float,
               alloc_unit_time: float, *, shed: int = 0,
               deferred: int = 0, peak_cache_tokens: int = 0,
-              cache_utilization: float = 0.0) -> ServingMetrics:
+              cache_utilization: float = 0.0,
+              proxy_rms_error: float = float("nan"),
+              refit_count: int = 0) -> ServingMetrics:
     """The one record->metrics reduction.  Both ``OnlineRuntime.serve``
     and ``ClusterRuntime.serve`` (per tenant and aggregate) funnel their
     tier-labelled ``QueryRecord``s through here, so per-tier
@@ -137,7 +144,9 @@ def summarize(records: list[QueryRecord], qps_offered: float,
                               conflict_rate, 0.0, 0.0,
                               shed_queries=shed, deferred_queries=deferred,
                               peak_cache_tokens=peak_cache_tokens,
-                              cache_utilization=cache_utilization)
+                              cache_utilization=cache_utilization,
+                              proxy_rms_error=proxy_rms_error,
+                              refit_count=refit_count)
     lats = np.array([r.latency for r in records])
     sat = np.mean([r.satisfied for r in records])
     span = max(max(r.finish for r in records)
@@ -166,6 +175,8 @@ def summarize(records: list[QueryRecord], qps_offered: float,
         deferred_queries=deferred,
         peak_cache_tokens=peak_cache_tokens,
         cache_utilization=cache_utilization,
+        proxy_rms_error=proxy_rms_error,
+        refit_count=refit_count,
         per_tier=per_tier,
     )
 

@@ -133,6 +133,27 @@ class Policy:
         leave the solo-tuned code version."""
         return 0.0
 
+    def observe_counters(self, sample: CounterSample,
+                         target: cm.Interference) -> None:
+        """Feed one (counter sample, realized pressure) pair back into the
+        policy's pressure estimator — the online re-fit hook the runtimes
+        call when serving with measured counters.  ``target`` is the
+        pressure the sample is later known to correspond to (oracle truth
+        where available, else the counter bank's slowdown-derived
+        estimate).  Baselines have no estimator; no-op."""
+        return None
+
+    @property
+    def proxy_rms_error(self) -> float:
+        """Sliding-window RMS residual of the policy's pressure proxy
+        (NaN for policies without one / before any observation)."""
+        return float("nan")
+
+    @property
+    def proxy_refits(self) -> int:
+        """Drift-triggered proxy refits so far (0 without an estimator)."""
+        return 0
+
 
 class VeltairPolicy(Policy):
     """The full adaptive compiler+scheduler (paper Alg. 3).
@@ -197,6 +218,17 @@ class VeltairPolicy(Policy):
         # tid=-1 matches no running demand, so the proxy sees the full
         # co-runner pressure — the engine itself is the "victim"
         return self._predict_pressure(-1, demands, now).level
+
+    def observe_counters(self, sample, target):
+        self.proxy.rls_update(np.asarray(sample.values)[:2], target)
+
+    @property
+    def proxy_rms_error(self):
+        return self.proxy.rms_error
+
+    @property
+    def proxy_refits(self):
+        return self.proxy.refit_count
 
     def _threshold(self, task: TaskState, active: list[TaskState]) -> float:
         total_avg = sum(t.plan.avg_units for t in active) or 1

@@ -27,6 +27,8 @@ never leave a stale per-op entry shaping kernels.
 from __future__ import annotations
 
 import contextlib
+import json
+import pathlib
 from typing import Callable, Iterator
 
 import jax.numpy as jnp
@@ -40,6 +42,12 @@ _TILE_OVERRIDES: dict[str, dict] = {}
 
 # Stack of complete override tables pushed by tile_context (innermost last).
 _CONTEXT_STACK: list[dict[str, dict]] = []
+
+# Process-global autotuned level ladder (grid idx -> {op: tiling kwargs}),
+# installed by load_ladder()/install_ladder().  Engines constructed without
+# an explicit ladder or version_sets snapshot this table at build time and
+# use it in place of their built-in DEFAULT_LEVEL_TILES.
+_LADDER: list | None = None
 
 
 def set_mode(mode: str) -> None:
@@ -97,6 +105,40 @@ def all_tile_overrides() -> dict[str, dict]:
     runtime's tests assert the engine's level switches land here)."""
     src = _CONTEXT_STACK[-1] if _CONTEXT_STACK else _TILE_OVERRIDES
     return {op: dict(kw) for op, kw in src.items()}
+
+
+def install_ladder(levels: list | None) -> None:
+    """Install (or clear, with None) the process-global autotuned level
+    ladder.  ``levels`` is a per-grid-level list of op -> tiling-kwargs
+    tables — the ``levels`` payload of a ``LadderSpec``.  Engines built
+    afterwards snapshot it; engines already built are unaffected."""
+    global _LADDER
+    if levels is None:
+        _LADDER = None
+        return
+    _LADDER = [{op: dict(kw) for op, kw in lvl.items()} for lvl in levels]
+
+
+def active_ladder() -> list | None:
+    """Deep copy of the installed ladder levels (None when none is)."""
+    if _LADDER is None:
+        return None
+    return [{op: dict(kw) for op, kw in lvl.items()} for lvl in _LADDER]
+
+
+def load_ladder(path) -> list:
+    """Load a serialized LadderSpec JSON and install its levels as the
+    process-global ladder.  Parses the raw JSON rather than importing
+    the core dataclass (the kernel layer stays import-light); structural
+    validation beyond the basics is LadderSpec.validate()'s job."""
+    data = json.loads(pathlib.Path(path).read_text())
+    levels = data.get("levels")
+    if not isinstance(levels, list) or not levels or \
+            not all(isinstance(lvl, dict) for lvl in levels):
+        raise ValueError(f"{path}: not a serialized LadderSpec "
+                         "(missing/malformed 'levels')")
+    install_ladder(levels)
+    return active_ladder()
 
 
 def _ref_matmul(x, w):

@@ -28,6 +28,7 @@ from repro.serving.engine import (PREFILL_CHUNK_LEN, QUANTUM_BUCKETS,
                                   ServingEngine)
 from repro.serving.paging import TRASH_PAGE, PagePool
 from repro.serving.version_cache import VersionCache, VersionEntry, tiles_key
+from repro.core.counters import CounterBank, QuantumObservation
 
 __all__ = [
     "SimConfig", "Simulator", "run_sweep", "poisson_workload",
@@ -42,4 +43,5 @@ __all__ = [
     "QuantumHandle", "ServingEngine",
     "TRASH_PAGE", "PagePool",
     "VersionCache", "VersionEntry", "tiles_key",
+    "CounterBank", "QuantumObservation",
 ]

@@ -182,12 +182,17 @@ class ClusterRuntime:
                  seed: int = 0, fused: bool = True,
                  scheduler: str = "slo",
                  admission: AdmissionController | None = None,
-                 tiers: dict[str, TierSpec] | None = None):
+                 tiers: dict[str, TierSpec] | None = None,
+                 counter_source: str = "oracle",
+                 refit_proxy: bool | None = None):
         if len({t.name for t in tenants}) != len(tenants):
             raise ValueError("tenant names must be unique")
         if scheduler not in ("slo", "fifo"):
             raise ValueError(f"scheduler must be 'slo' or 'fifo', "
                              f"got {scheduler!r}")
+        if counter_source not in ("oracle", "measured"):
+            raise ValueError(f"counter_source must be 'oracle' or "
+                             f"'measured', got {counter_source!r}")
         self.tenants = list(tenants)
         self.policy = policy
         self.hw = hw
@@ -198,6 +203,14 @@ class ClusterRuntime:
         self.scheduler = scheduler
         self.admission = admission       # None = admit everything (legacy)
         self.book = DeadlineBook(tiers)
+        # counter provenance per engine: "measured" reads each tenant's
+        # own per-quantum wall-time bank (oracle fallback while cold);
+        # refit_proxy=None turns the online RLS re-fit on exactly when
+        # serving on measured counters
+        self.counter_source = counter_source
+        self.refit_proxy = (counter_source == "measured"
+                            if refit_proxy is None else bool(refit_proxy))
+        self.counter_sources = collections.Counter()  # source label -> polls
         self.pool = UnitPool(hw.n_units)
         self.ticks = 0
         self.conflicts = 0               # admission rejections (engine full)
@@ -294,7 +307,15 @@ class ClusterRuntime:
         """One scheduling quantum decision for ``tenant``: counters ->
         proxy -> layer-block plan -> pool grant + engine code version."""
         st = self._state[tenant.name]
-        sample = read_counters(self.hw, idx, demands, now, self._rng)
+        sample = read_counters(self.hw, idx, demands, now, self._rng,
+                               source=self.counter_source,
+                               bank=tenant.engine.counter_bank)
+        self.counter_sources[sample.source] += 1
+        if self.refit_proxy:
+            target = (sample.truth if sample.truth is not None
+                      else tenant.engine.counter_bank.pressure())
+            if target is not None:
+                self.policy.observe_counters(sample, target)
         itf = self.policy.interference_from_counters(sample)
         task = self._task(idx, tenant)
         plan = self.policy.plan_chunk_at(task, active_tasks, itf, now,
@@ -445,6 +466,12 @@ class ClusterRuntime:
             for t in self.tenants:
                 if not t.engine.active_slots:
                     self._release(self._state[t.name])
+
+            # stamp each engine's live co-runner occupancy so its measured
+            # counter bank records who it shared the machine with
+            total_active = sum(t.engine.active_slots for t in self.tenants)
+            for t in self.tenants:
+                t.engine.co_runner_load = total_active - t.engine.active_slots
 
             t_tick = time.perf_counter()
             demands = self._live_demands(meta, now)
@@ -637,7 +664,9 @@ class ClusterRuntime:
                               shed=self.shed, deferred=self.deferred,
                               peak_cache_tokens=peak_tokens,
                               cache_utilization=(peak_tokens / peak_cap
-                                                 if peak_cap else 0.0))
+                                                 if peak_cap else 0.0),
+                              proxy_rms_error=self.policy.proxy_rms_error,
+                              refit_count=self.policy.proxy_refits)
         return ClusterMetrics(
             aggregate=aggregate, per_tenant=per_tenant,
             level_traces={t.name: list(self._state[t.name].levels)

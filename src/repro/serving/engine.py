@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 import warnings
 
 import jax
@@ -45,6 +46,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import cost_model as cm
+from repro.core.counters import CounterBank
 from repro.kernels import dispatch
 from repro.models.model import Model, build_model, cache_batch_axis, path_keys
 from repro.serving.paging import TRASH_PAGE, PagePool
@@ -124,6 +126,16 @@ class QuantumHandle:
     steps: int                     # quantum length (max over rows)
     active: list[int]              # slots live at dispatch time
     row_steps: dict = dataclasses.field(default_factory=dict)  # rid -> steps
+    # measured-counter bookkeeping: t0 is stamped AFTER the version-cache
+    # lookup (and any AOT compile it performed), so the wall time closed
+    # out by finish_quantum covers device work only — host-side scheduling
+    # and compile time are charged by the runtimes, never double-counted
+    # here.  traces0 snapshots the version-cache trace counter; a quantum
+    # that traced inside its timed span is not observed at all.
+    t0: float = 0.0                # perf_counter at dispatch (0 = untimed)
+    traces0: int = -1              # version-cache traces at dispatch
+    bucket: int = 0                # K-bucket the executable ran
+    tiles: tuple = ()              # tiles key of the dispatched version
 
 
 class ServingEngine:
@@ -134,7 +146,8 @@ class ServingEngine:
                  chunked_prefill: bool = True,
                  prefill_chunk_len: int = PREFILL_CHUNK_LEN,
                  page_size: int | None = None, n_pages: int | None = None,
-                 page_reserve: str = "worst", prefix_sharing: bool = True):
+                 page_reserve: str = "worst", prefix_sharing: bool = True,
+                 ladder=None):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.params = params
@@ -215,11 +228,33 @@ class ServingEngine:
         self._empty_row = (self.model.init_cache(1, max_len) if self.paged
                            else self._slice_row(0))
         # adaptive-compilation state: tiles come from the dominant layer's
-        # multi-version table when one is supplied, else the default table
+        # multi-version table when one is supplied; else from an autotuned
+        # level ladder (the ``ladder`` argument — a LadderSpec or its raw
+        # levels list — or, when neither is given, the process-global
+        # ladder dispatch.load_ladder() installed); else the built-in
+        # DEFAULT_LEVEL_TILES.  The ladder is snapshotted at build time so
+        # later global installs never change a live engine's versions.
         self.version_sets = version_sets
         self._tile_source = (max(version_sets,
                                  key=lambda vs: vs.solo_version().flops)
                              if version_sets else None)
+        lad = ladder if ladder is not None else dispatch.active_ladder()
+        if lad is not None and hasattr(lad, "levels"):
+            lad = lad.levels
+        if lad is not None:
+            if len(lad) != cm.NUM_LEVELS:
+                raise ValueError(f"ladder has {len(lad)} levels, expected "
+                                 f"{cm.NUM_LEVELS}")
+            self._ladder = [{op: dict(kw) for op, kw in lvl.items()}
+                            for lvl in lad]
+        else:
+            self._ladder = None
+        # measured-counter loop: per-quantum wall times feed this bank;
+        # the runtimes poll it through read_counters(source="measured").
+        # co_runner_load is stamped by the cluster runtime before each
+        # dispatch (observability on the recorded observations).
+        self.counter_bank = CounterBank()
+        self.co_runner_load = 0
         self.interference_level = 0.0
         self._active_tiles: dict | None = None
         self.level_switches = 0           # distinct-version switch count
@@ -269,6 +304,9 @@ class ServingEngine:
             v = self._tile_source.select(itf)
             return {"matmul": {"bm": int(v.bm), "bk": int(v.bk),
                                "bn": int(v.bn)}}
+        if self._ladder is not None:
+            lvl = self._ladder[cm.level_to_idx(itf.level)]
+            return {op: dict(kw) for op, kw in lvl.items()}
         return DEFAULT_LEVEL_TILES[cm.level_to_idx(itf.level)]
 
     def set_interference_level(self, level: float) -> dict:
@@ -335,8 +373,7 @@ class ServingEngine:
         tile_tables = [self._active_tiles if self._active_tiles is not None
                        else {}]
         tile_tables += [self.tiles_for_level(lv) for lv in levels]
-        for tiles in tile_tables:
-            entry = self.version_cache.get(tiles)
+        for entry in self.version_cache.warmup(tile_tables):
             # decode donates its cache: adopt the returned one (numerics
             # are irrelevant here — live rows are always re-prefilled from
             # the pristine row at admission)
@@ -982,6 +1019,8 @@ class ServingEngine:
         valid = min(c, n - st.done)
         toks = np.zeros(c, np.int32)
         toks[:valid] = st.req.prompt[st.done:st.done + valid]
+        traces0 = self.version_cache.traces
+        t0 = time.perf_counter()
         logits, st.row_cache = self._prefill_chunk(
             self.params, jnp.asarray(toks)[None], st.row_cache,
             jnp.int32(st.done), jnp.int32(valid))
@@ -1000,6 +1039,17 @@ class ServingEngine:
                 self.cache = self._row_writer(self.cache, st.row_cache,
                                               jnp.int32(slot))
             first = int(jnp.argmax(logits[0]))   # the ONE sync per admission
+            # only the finishing chunk syncs, so only it yields a usable
+            # wall time (intermediate chunks are async dispatches whose
+            # device work this sync may still be draining — keying the
+            # observation by the full prompt's pow2 bucket keeps walls
+            # comparable); the trace guard drops first-visit compiles
+            # like the decode path
+            if traces0 == self.version_cache.traces:
+                self.counter_bank.observe(
+                    "prefill", _next_pow2(max(st.done, 1)),
+                    self._entry.key, time.perf_counter() - t0,
+                    tokens=valid, co_runners=self.co_runner_load)
             self.host_syncs += 1
             self.tokens_decoded += 1
             st.req.output.append(first)
@@ -1080,24 +1130,34 @@ class ServingEngine:
             # mixed-length / staggered prompts stay exact (free slots
             # compute garbage rows that the next admission's pristine-row
             # prefill replaces)
+            traces0 = self.version_cache.traces
+            t0 = time.perf_counter()
             logits, self.cache = self._decode(
                 self.params, {"tokens": jnp.asarray(toks)}, self.cache,
                 jnp.asarray(self.slot_pos))
             n_left = np.minimum(n_left, 1)
             return QuantumHandle(block=jnp.argmax(logits, axis=-1)[None],
-                                 n_left=n_left, steps=1, active=active)
+                                 n_left=n_left, steps=1, active=active,
+                                 t0=t0, traces0=traces0, bucket=1,
+                                 tiles=self._entry.key)
         steps = int(min(int(k), int(n_left.max()),
                         self.quantum_buckets[-1]))
         bucket = next(b for b in self.quantum_buckets if b >= steps)
         n_left = np.minimum(n_left, steps)
         qfn = self.version_cache.quantum(self._entry, bucket, self.params,
                                          self.cache, self.slots)
+        # timestamp AFTER the executable lookup: a cold K-bucket's AOT
+        # compile is host-side cost the runtimes charge, not device work
+        # the measured counters may attribute to interference
+        traces0 = self.version_cache.traces
+        t0 = time.perf_counter()
         block, self.cache, _ = qfn(
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(self.slot_pos), jnp.asarray(n_left))
         self.quantum_calls += 1
         return QuantumHandle(block=block, n_left=n_left, steps=steps,
-                             active=active)
+                             active=active, t0=t0, traces0=traces0,
+                             bucket=bucket, tiles=self._entry.key)
 
     def finish_quantum(self, handle: QuantumHandle | None) -> list[Request]:
         """Block on a dispatched quantum — the single device->host sync at
@@ -1109,6 +1169,17 @@ class ServingEngine:
             return []
         block = np.asarray(handle.block)     # ONE sync for the whole block
         self.host_syncs += 1
+        # measured counters: the sync above closed the quantum's device
+        # span; observe it unless it was untimed or traced mid-span (a
+        # first-visit compile inside the timed region must not read as
+        # interference slowdown — the trace guard drops it)
+        if handle.t0 > 0.0 and \
+                handle.traces0 == self.version_cache.traces:
+            self.counter_bank.observe(
+                "decode", handle.bucket, handle.tiles,
+                time.perf_counter() - handle.t0,
+                tokens=int(handle.n_left.sum()),
+                co_runners=self.co_runner_load)
         finished = []
         for i in handle.active:
             req = self.slot_req[i]

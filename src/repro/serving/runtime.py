@@ -216,10 +216,15 @@ class OnlineRuntime:
                  max_steps: int = 200_000, seed: int = 0,
                  fused: bool = True, scheduler: str = "slo",
                  admission: AdmissionController | None = None,
-                 tiers: dict[str, TierSpec] | None = None):
+                 tiers: dict[str, TierSpec] | None = None,
+                 counter_source: str = "oracle",
+                 refit_proxy: bool | None = None):
         if scheduler not in ("slo", "fifo"):
             raise ValueError(f"scheduler must be 'slo' or 'fifo', "
                              f"got {scheduler!r}")
+        if counter_source not in ("oracle", "measured"):
+            raise ValueError(f"counter_source must be 'oracle' or "
+                             f"'measured', got {counter_source!r}")
         self.engine = engine
         self.policy = policy
         self.plans = plans
@@ -231,6 +236,15 @@ class OnlineRuntime:
         self.scheduler = scheduler
         self.admission = admission       # None = admit everything (legacy)
         self.book = DeadlineBook(tiers)
+        # counter provenance: "oracle" synthesizes samples from the demand
+        # sums (legacy, deterministic per seed); "measured" derives them
+        # from the engine's per-quantum wall-time bank, falling back to
+        # oracle while the bank is cold.  refit_proxy=None enables the
+        # online RLS re-fit exactly when serving on measured counters.
+        self.counter_source = counter_source
+        self.refit_proxy = (counter_source == "measured"
+                            if refit_proxy is None else bool(refit_proxy))
+        self.counter_sources = collections.Counter()  # source label -> polls
         import numpy as np
         self._rng = np.random.default_rng(seed)   # counter-read noise
         self.records: list[QueryRecord] = []
@@ -430,7 +444,17 @@ class OnlineRuntime:
             # sample to a level through its calibrated proxy (victim=-1:
             # the engine observes the full co-runner pressure)
             demands = self._active_demands(meta, now)
-            sample = read_counters(self.hw, -1, demands, now, self._rng)
+            sample = read_counters(self.hw, -1, demands, now, self._rng,
+                                   source=self.counter_source,
+                                   bank=self.engine.counter_bank)
+            self.counter_sources[sample.source] += 1
+            if self.refit_proxy:
+                # realized-pressure label: oracle truth where the sample
+                # carries it, else the bank's slowdown-derived estimate
+                target = (sample.truth if sample.truth is not None
+                          else self.engine.counter_bank.pressure())
+                if target is not None:
+                    self.policy.observe_counters(sample, target)
             level = self.policy.level_from_counters(sample)
             # the step timer starts BEFORE the version switch: any re-jit /
             # compile the switch triggers is real serving latency (the very
@@ -535,4 +559,6 @@ class OnlineRuntime:
                          self.conflicts / max(wl.n_queries, 1), busy, alloc,
                          shed=self.shed, deferred=self.deferred,
                          peak_cache_tokens=self.engine.peak_cache_tokens,
-                         cache_utilization=self.engine.cache_utilization)
+                         cache_utilization=self.engine.cache_utilization,
+                         proxy_rms_error=self.policy.proxy_rms_error,
+                         refit_count=self.policy.proxy_refits)

@@ -95,6 +95,14 @@ class VersionCache:
         return {"entries": len(self._entries), "hits": self.hits,
                 "misses": self.misses, "traces": self.traces}
 
+    def warmup(self, tile_tables) -> list[VersionEntry]:
+        """Pre-create one entry per tile table (``LadderSpec`` levels, a
+        level-grid sweep, ...) so serve-time version switches are
+        dictionary lookups.  Returns the entries in input order (the
+        engine's warmup then executes each to force the actual
+        compiles); duplicate tables resolve to the same entry."""
+        return [self.get(tiles) for tiles in tile_tables]
+
     def get(self, tiles: dict[str, dict]) -> VersionEntry:
         if dispatch.get_mode() == "xla":
             # the reference path ignores tiling entirely: all versions

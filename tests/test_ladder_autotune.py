@@ -1,0 +1,238 @@
+"""Autotuned tile ladder (ISSUE-8 tentpole, part 2).
+
+(1) ``search_tile_ladder`` emits a valid LadderSpec: NUM_LEVELS levels,
+finite predicted scores, the exclusive -> shared working-set invariant
+holding *by construction* (the search caps candidates at the previous
+level's footprint).
+(2) The invariant is enforced, not advisory: ``validate()`` raises on a
+growing working set, on a wrong level count, and on incomplete tilings;
+``from_json`` rejects unknown schemas; ``dispatch.load_ladder`` rejects
+malformed files.
+(3) Round trip: search -> to_json -> file -> ``dispatch.load_ladder``
+installs the process-global ladder -> an engine built afterwards serves
+from it (and an explicit ``ladder=`` argument wins over the default
+table).
+(4) Warmup prebuilds every ladder level: a full level-grid sweep with
+live decode quanta after ``warmup()`` performs ZERO retraces.
+(5) The ``tools/autotune_ladder.py --smoke`` CLI is an end-to-end
+search -> validate -> serialize check (the fast CI job runs it).
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks.hillclimb import _attention_tiles, search_tile_ladder
+from repro.core import cost_model as cm
+from repro.core.multiversion import LADDER_SCHEMA, LadderSpec, _matmul_bytes
+from repro.kernels import dispatch
+
+HW = cm.CPU_3990X
+SMOKE_TILES = (32, 64, 128, 256)
+
+
+def _smoke_layer():
+    return cm.GemmLayer(name="smoke512", m=512, k=512, n=512, itemsize=4,
+                        weight_bytes=512 * 512 * 4)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return search_tile_ladder(_smoke_layer(), HW, tiles=SMOKE_TILES)
+
+
+@pytest.fixture(autouse=True)
+def _clean_global_ladder():
+    """Every test leaves the process-global ladder as it found it."""
+    before = dispatch.active_ladder()
+    yield
+    dispatch.install_ladder(before)
+
+
+# ---------------------------------------------------------------------------
+# (1) search output
+# ---------------------------------------------------------------------------
+def test_search_emits_full_valid_ladder(spec):
+    assert len(spec) == cm.NUM_LEVELS
+    spec.validate()                      # must not raise
+    assert len(spec.scores) == cm.NUM_LEVELS
+    assert all(s > 0.0 for s in spec.scores)
+    assert spec.hw == HW.name
+    assert spec.meta["layer"] == "smoke512"
+    assert spec.meta["tiles"] == list(SMOKE_TILES)
+    # every level carries both ops, attention coupled to the matmul M-tile
+    for lvl in spec.levels:
+        assert set(lvl) == {"matmul", "attention"}
+        assert lvl["attention"] == _attention_tiles(lvl["matmul"]["bm"])
+
+
+def test_search_ladder_is_monotone_exclusive_to_shared(spec):
+    sizes = [_matmul_bytes(lvl) for lvl in spec.levels]
+    assert sizes == sorted(sizes, reverse=True)
+    # the search explored: the shared end must actually cede footprint
+    # relative to the exclusive end on this layer/tile-set
+    assert sizes[-1] < sizes[0]
+
+
+def test_search_scores_are_cost_model_latencies(spec):
+    """Level 0's score is the zero-pressure latency of level 0's tiling —
+    the search's objective, recomputable from the public cost model."""
+    import repro.core.schedule_space as ss
+    units = spec.meta["units"]
+    cands = ss.enumerate_versions(_smoke_layer(), HW, tiles=SMOKE_TILES)
+    kw = spec.levels[0]["matmul"]
+    best = min((v for v in cands
+                if (v.bm, v.bk, v.bn) == (kw["bm"], kw["bk"], kw["bn"])),
+               key=lambda v: cm.latency(HW, v, units, cm.Interference()))
+    assert spec.scores[0] == pytest.approx(
+        cm.latency(HW, best, units, cm.Interference()))
+
+
+def test_search_rejects_empty_candidate_set():
+    # on VMEM-constrained hardware a tile set of only huge tiles is
+    # infeasible (working set over the hard cache limit)
+    big = cm.GemmLayer(name="big", m=4096, k=4096, n=4096, itemsize=4,
+                       weight_bytes=4096 * 4096 * 4)
+    with pytest.raises(ValueError, match="no feasible tile candidates"):
+        search_tile_ladder(big, cm.TPU_V5E_POD, tiles=(4096,))
+
+
+# ---------------------------------------------------------------------------
+# (2) invariants are enforced
+# ---------------------------------------------------------------------------
+def _levels(bms):
+    return [{"matmul": {"bm": bm, "bk": 64, "bn": 64},
+             "attention": _attention_tiles(bm)} for bm in bms]
+
+
+def test_validate_rejects_growing_working_set():
+    bms = [64] * (cm.NUM_LEVELS - 1) + [256]      # grows at the shared end
+    spec = LadderSpec(name="bad", hw=HW.name, levels=_levels(bms))
+    with pytest.raises(ValueError, match="ordering violated"):
+        spec.validate()
+
+
+def test_validate_rejects_wrong_level_count_and_incomplete_tiling():
+    with pytest.raises(ValueError, match="levels"):
+        LadderSpec(name="short", hw=HW.name,
+                   levels=_levels([64] * 3)).validate()
+    levels = _levels([64] * cm.NUM_LEVELS)
+    del levels[4]["matmul"]["bk"]
+    with pytest.raises(ValueError, match="complete matmul"):
+        LadderSpec(name="holey", hw=HW.name, levels=levels).validate()
+
+
+def test_from_json_rejects_unknown_schema(spec):
+    data = json.loads(spec.to_json())
+    data["schema"] = LADDER_SCHEMA + 1
+    with pytest.raises(ValueError, match="schema"):
+        LadderSpec.from_json(json.dumps(data))
+
+
+def test_load_ladder_rejects_malformed_file(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"name": "x"}))
+    with pytest.raises(ValueError, match="levels"):
+        dispatch.load_ladder(p)
+
+
+# ---------------------------------------------------------------------------
+# (3) round trip: emit -> JSON -> dispatch install -> engine
+# ---------------------------------------------------------------------------
+def test_roundtrip_json_file_to_dispatch(spec, tmp_path):
+    path = spec.save(tmp_path / "ladder.json")
+    back = LadderSpec.load(path)
+    assert back.levels == spec.levels
+    assert back.scores == pytest.approx(spec.scores)
+    installed = dispatch.load_ladder(path)
+    assert installed == spec.levels
+    assert dispatch.active_ladder() == spec.levels
+    dispatch.install_ladder(None)
+    assert dispatch.active_ladder() is None
+
+
+def test_tile_tables_are_distinct_in_level_order(spec):
+    tables = spec.tile_tables()
+    assert 1 <= len(tables) <= cm.NUM_LEVELS
+    seen = []
+    for t in tables:
+        assert t not in seen
+        seen.append(t)
+    assert tables[0] == spec.levels[0]   # level order preserved
+
+
+@pytest.fixture(scope="module")
+def engine_factory():
+    import jax
+
+    from repro.configs import get_reduced_config
+    from repro.models import build_model
+
+    cfg = get_reduced_config("gemma-2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def make(**kw):
+        from repro.serving.engine import ServingEngine
+        kw.setdefault("batch_slots", 2)
+        kw.setdefault("max_len", 32)
+        return ServingEngine(cfg, params, **kw)
+    return make
+
+
+def test_engine_consumes_installed_and_explicit_ladder(spec, engine_factory):
+    # explicit argument: the engine's level->tiles map IS the spec's
+    eng = engine_factory(ladder=spec)
+    for i in range(cm.NUM_LEVELS):
+        lv = cm.grid_point(i)
+        assert eng.tiles_for_level(lv) == spec.tiles_for_level(lv)
+    # process-global install: engines built afterwards pick it up
+    dispatch.install_ladder(spec.levels)
+    eng2 = engine_factory()
+    assert eng2.tiles_for_level(0.0) == spec.tiles_for_level(0.0)
+    dispatch.install_ladder(None)
+    # a live engine snapshotted the ladder: the uninstall can't touch it
+    assert eng2.tiles_for_level(0.0) == spec.tiles_for_level(0.0)
+
+
+def test_engine_rejects_wrong_length_ladder(engine_factory):
+    with pytest.raises(ValueError, match="levels"):
+        engine_factory(ladder=_levels([64] * 2))
+
+
+# ---------------------------------------------------------------------------
+# (4) warmup prebuilds every level: zero post-warmup retraces
+# ---------------------------------------------------------------------------
+def test_warmup_prebuilds_ladder_zero_post_warmup_retraces(
+        spec, engine_factory):
+    from repro.serving.engine import Request
+
+    eng = engine_factory(ladder=spec)
+    eng.warmup()
+    traces0 = eng.version_cache.traces
+    eng.admit_request(Request(rid=0, prompt=[1, 2, 3, 4],
+                              max_new_tokens=24))
+    while eng.prefill_pending:
+        eng.prefill_step()
+    # full exclusive->shared sweep with live decode quanta at each level
+    for i in range(cm.NUM_LEVELS):
+        eng.set_interference_level(cm.grid_point(i))
+        eng.finish_quantum(eng.begin_quantum(2, fused=True))
+    assert eng.version_cache.traces == traces0, \
+        "level sweep after warmup must never retrace"
+
+
+# ---------------------------------------------------------------------------
+# (5) the CLI smoke path (what the fast CI job runs)
+# ---------------------------------------------------------------------------
+def test_autotune_cli_smoke(tmp_path):
+    out = tmp_path / "smoke.json"
+    r = subprocess.run(
+        [sys.executable, "tools/autotune_ladder.py", "--smoke",
+         "--out", str(out)],
+        capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stderr
+    spec = LadderSpec.load(out)          # validates on load
+    assert len(spec) == cm.NUM_LEVELS
+    assert dispatch.load_ladder(out) == spec.levels

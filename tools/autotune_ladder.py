@@ -1,0 +1,99 @@
+"""Autotune an interference-level -> tile-table ladder (LadderSpec JSON).
+
+Drives :func:`benchmarks.hillclimb.search_tile_ladder` over a
+representative GEMM layer — by default the dominant-FLOPs layer of a
+paper-suite model — and writes the resulting
+:class:`repro.core.multiversion.LadderSpec` to JSON.  The artifact
+replaces the engine's hand-written ``DEFAULT_LEVEL_TILES``:
+
+    python tools/autotune_ladder.py --model resnet50 --out ladder.json
+    # then, in the serving process:
+    #   repro.kernels.dispatch.load_ladder("ladder.json")
+    # or pass the spec to ServingEngine(ladder=...)
+
+``--smoke`` tunes a small synthetic GEMM over a restricted tile set —
+sub-second, exercised by the fast CI job as an end-to-end
+search -> validate -> serialize check.  Exit code 0 means the emitted
+spec round-trips and satisfies the ladder ordering invariant.
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(ROOT / "src"), str(ROOT)):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from repro.core import cost_model as cm                      # noqa: E402
+from repro.core.multiversion import LadderSpec               # noqa: E402
+from benchmarks.hillclimb import search_tile_ladder          # noqa: E402
+
+SMOKE_TILES = (32, 64, 128, 256)
+
+
+def representative_layer(model: str) -> cm.GemmLayer:
+    """The dominant-FLOPs layer of a paper-suite model — the layer whose
+    tiling the whole model's version choice is most sensitive to."""
+    from repro.configs.paper_suite import paper_models
+    pm = paper_models()[model]
+    return max(pm.layers, key=lambda l: l.flops)
+
+
+def smoke_layer() -> cm.GemmLayer:
+    return cm.GemmLayer(name="smoke512", m=512, k=512, n=512, itemsize=4,
+                        weight_bytes=512 * 512 * 4)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="resnet50",
+                    help="paper-suite model supplying the representative "
+                         "layer (ignored with --smoke)")
+    ap.add_argument("--hw", default="cpu", choices=("cpu", "tpu"),
+                    help="hardware model to tune against")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: ladder_<name>.json; "
+                         "'-' prints to stdout)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny synthetic search (CI: fast end-to-end "
+                         "search -> validate -> serialize check)")
+    ap.add_argument("--units", type=int, default=None,
+                    help="co-runner unit share to model (default n_units/4)")
+    args = ap.parse_args(argv)
+
+    hw = cm.CPU_3990X if args.hw == "cpu" else cm.TPU_V5E_POD
+    if args.smoke:
+        layer, tiles, label = smoke_layer(), SMOKE_TILES, "smoke"
+    else:
+        layer, tiles, label = representative_layer(args.model), None, \
+            args.model
+
+    kw = {"units": args.units, "name": f"{label}@{hw.name}"}
+    if tiles is not None:
+        kw["tiles"] = tiles
+    spec = search_tile_ladder(layer, hw, **kw)
+
+    # round-trip through the serialized form before declaring success —
+    # the file is only useful if dispatch.load_ladder can consume it
+    text = spec.to_json()
+    back = LadderSpec.from_json(text)
+    assert back.levels == spec.levels
+
+    if args.out == "-":
+        print(text)
+        return 0
+    out = pathlib.Path(args.out or f"ladder_{label}.json")
+    out.write_text(text)
+    distinct = len(spec.tile_tables())
+    print(f"[autotune_ladder] {spec.name}: {len(spec)} levels "
+          f"({distinct} distinct tables) -> {out}")
+    print(f"[autotune_ladder] level latencies (us): "
+          f"{[round(s * 1e6, 1) for s in spec.scores]}")
+    print(json.dumps(spec.meta))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,8 +19,13 @@ cache the same way (also virtual-time exact): >= PAGED_GAIN_MIN x the
 dense engine's peak concurrent requests at an equal device memory
 budget, token-identical outputs, zero post-warmup retraces, a counted
 shed/defer response to page-pool exhaustion, and >= 1 page deduplicated
-by cross-request prefix sharing in the paged cluster.  Run from the
-repo root:
+by cross-request prefix sharing in the paged cluster.  The ``measured``
+section gates the closed adaptive-compilation loop: the proxy's
+sliding-window RMS residual while serving on measured per-quantum
+wall-time counters must stay <= 1.5x the oracle-calibration residual,
+the autotuned tile ladder must serve >= the fixed level table's
+queries-under-QoS (virtual-time exact), and the ladder engine must hold
+zero post-warmup retraces.  Run from the repo root:
 
     python -m benchmarks.bench_online_serving --tiny
     python tools/check_bench.py
@@ -57,6 +62,14 @@ SLO_TIER_ORDER = ("interactive", "standard", "batch")
 # paged KV cache must sustain at least this multiple of the dense
 # engine's peak concurrent requests, with token-identical outputs.
 PAGED_GAIN_MIN = 1.5
+
+# The measured section (ISSUE-8): serving on measured per-quantum
+# wall-time counters with the online RLS re-fit must keep the proxy's
+# sliding-window RMS residual within this multiple of the offline
+# oracle-calibration residual, and the autotuned tile ladder must serve
+# at least as many queries-under-QoS as the fixed level table (exact:
+# virtual time) with zero post-warmup retraces.
+MEASURED_ERR_MAX = 1.5
 
 
 def check(path: pathlib.Path) -> list[str]:
@@ -108,6 +121,46 @@ def check(path: pathlib.Path) -> list[str]:
                 "exercising the length spread")
     errors.extend(check_slo(data.get("slo")))
     errors.extend(check_paged(data.get("paged")))
+    errors.extend(check_measured(data.get("measured")))
+    return errors
+
+
+def check_measured(m: dict | None) -> list[str]:
+    """The measured-counter / autotuned-ladder gates (ISSUE-8)."""
+    if not m or "proxy" not in m or "ladder" not in m:
+        return ["BENCH_serving.json has no measured section (stale "
+                "file?) — rerun "
+                "`python -m benchmarks.bench_online_serving --tiny`"]
+    errors = []
+    pr = m["proxy"]
+    if not pr["measured_rms"] <= MEASURED_ERR_MAX * pr["oracle_rms"]:
+        errors.append(
+            f"measured-counter proxy error blew past calibration: "
+            f"window rms {pr['measured_rms']} vs oracle-calibrated "
+            f"{pr['oracle_rms']} (need <= {MEASURED_ERR_MAX}x — the "
+            "online RLS re-fit is not tracking the measured pressure)")
+    if pr.get("polls", {}).get("measured", 0) <= 0:
+        errors.append(
+            "the measured serve never polled a measured counter sample — "
+            "the CounterBank stayed cold for the whole run and every "
+            "sample fell back to the oracle synthesizer")
+    if pr.get("rls_updates", 0) <= 0:
+        errors.append(
+            "the online proxy re-fit received zero observations during "
+            "the measured serve — observe_counters is not being called")
+    lad = m["ladder"]
+    fixed_q = lad["fixed"]["qps_at_qos"]
+    auto_q = lad["autotuned"]["qps_at_qos"]
+    if not auto_q >= fixed_q:
+        errors.append(
+            f"autotuned ladder lost queries-under-QoS to the fixed level "
+            f"table: {auto_q} vs {fixed_q} qps_at_qos (virtual time — "
+            "the comparison is exact, this is a real regression)")
+    if lad["autotuned"]["post_warmup_traces"] != 0:
+        errors.append(
+            f"autotuned-ladder engine retraced after warmup: "
+            f"{lad['autotuned']['post_warmup_traces']} post-warmup traces "
+            "(VersionCache.warmup must prebuild every ladder level)")
     return errors
 
 
@@ -228,6 +281,19 @@ def main() -> int:
               f"deferred={p['tiny_pool']['deferred']}; "
               f"cluster_shared={p['cluster']['shared_hits']}; "
               f"token_identical={p['token_identical']})")
+    if data.get("measured"):
+        mm = data["measured"]
+        print(f"bench gate: measured-counter proxy holds "
+              f"{mm['proxy']['rms_ratio']}x the calibration residual "
+              f"(measured {mm['proxy']['measured_rms']} vs oracle "
+              f"{mm['proxy']['oracle_rms']}; "
+              f"refits={mm['proxy']['refits']}; "
+              f"measured_polls={mm['proxy']['polls'].get('measured', 0)}); "
+              f"autotuned ladder serves "
+              f"{mm['ladder']['gain_qps_at_qos']}x the fixed table's "
+              f"queries-under-QoS with "
+              f"{mm['ladder']['autotuned']['post_warmup_traces']} "
+              f"post-warmup traces")
     return 0
 
 

@@ -113,6 +113,12 @@ class ServingMetrics:
                                     # policies without one / oracle runs
                                     # that never feed it)
     refit_count: int = 0            # drift-triggered online proxy refits
+    tokens_accepted: int = 0        # draft tokens accepted by speculative
+                                    # verify quanta (0 on non-spec runs)
+    draft_hit_rate: float = 0.0     # tokens_accepted / tokens_drafted —
+                                    # the workload's speculation quality
+    spec_rollbacks: int = 0         # spec quanta where >= 1 draft position
+                                    # was rejected and rolled back
     per_tier: dict[str, TierMetrics] = dataclasses.field(default_factory=dict)
 
 
@@ -134,7 +140,9 @@ def summarize(records: list[QueryRecord], qps_offered: float,
               deferred: int = 0, peak_cache_tokens: int = 0,
               cache_utilization: float = 0.0,
               proxy_rms_error: float = float("nan"),
-              refit_count: int = 0) -> ServingMetrics:
+              refit_count: int = 0, tokens_accepted: int = 0,
+              draft_hit_rate: float = 0.0,
+              spec_rollbacks: int = 0) -> ServingMetrics:
     """The one record->metrics reduction.  Both ``OnlineRuntime.serve``
     and ``ClusterRuntime.serve`` (per tenant and aggregate) funnel their
     tier-labelled ``QueryRecord``s through here, so per-tier
@@ -146,7 +154,10 @@ def summarize(records: list[QueryRecord], qps_offered: float,
                               peak_cache_tokens=peak_cache_tokens,
                               cache_utilization=cache_utilization,
                               proxy_rms_error=proxy_rms_error,
-                              refit_count=refit_count)
+                              refit_count=refit_count,
+                              tokens_accepted=tokens_accepted,
+                              draft_hit_rate=draft_hit_rate,
+                              spec_rollbacks=spec_rollbacks)
     lats = np.array([r.latency for r in records])
     sat = np.mean([r.satisfied for r in records])
     span = max(max(r.finish for r in records)
@@ -177,6 +188,9 @@ def summarize(records: list[QueryRecord], qps_offered: float,
         cache_utilization=cache_utilization,
         proxy_rms_error=proxy_rms_error,
         refit_count=refit_count,
+        tokens_accepted=tokens_accepted,
+        draft_hit_rate=draft_hit_rate,
+        spec_rollbacks=spec_rollbacks,
         per_tier=per_tier,
     )
 

@@ -242,19 +242,30 @@ def attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
                    window=cfg.sliding_window)
         new_cache = None
     elif page_table is not None:
-        if s != 1:
-            raise ValueError("paged attention is decode-only (S=1)")
         idx = jnp.broadcast_to(
             jnp.asarray(cache_index, jnp.int32).reshape(-1), (b,))
         ps_sz = cache["k"].shape[1]
-        bidx = jnp.arange(b, dtype=jnp.int32)
-        phys = page_table[bidx, idx // ps_sz]       # (B,) physical page
-        off = idx % ps_sz
-        ck = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype))
+        if s == 1:
+            bidx = jnp.arange(b, dtype=jnp.int32)
+            phys = page_table[bidx, idx // ps_sz]   # (B,) physical page
+            off = idx % ps_sz
+            ck = cache["k"].at[phys, off].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[phys, off].set(
+                v[:, 0].astype(cache["v"].dtype))
+        else:
+            # multi-token (speculative verify): scatter each row's S new
+            # tokens through the table.  Unmapped spans point at the trash
+            # page, so over-draft writes land harmlessly there.
+            rows = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+            phys = page_table[bidx, rows // ps_sz]  # (B,S)
+            off = rows % ps_sz
+            ck = cache["k"].at[phys, off].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[phys, off].set(v.astype(cache["v"].dtype))
         new_cache = {"k": ck, "v": cv}
         from repro.kernels import dispatch
-        fn = dispatch.get_paged_attention()
+        fn = dispatch.get_paged_attention() if s == 1 else None
         if fn is not None:
             y = fn(q, ck, cv, page_table=page_table, q_positions=qpos,
                    kv_valid_len=idx + 1, window=cfg.sliding_window,
@@ -263,7 +274,7 @@ def attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
             n_slot = page_table.shape[1]
             kd = ck[page_table].reshape(b, n_slot * ps_sz, *ck.shape[2:])
             vd = cv[page_table].reshape(b, n_slot * ps_sz, *cv.shape[2:])
-            y = attend(q, kd, vd, q_positions=qpos, kv_valid_len=idx + 1,
+            y = attend(q, kd, vd, q_positions=qpos, kv_valid_len=idx + s,
                        window=cfg.sliding_window, use_kernel_hook=False)
     else:
         idx = jnp.asarray(cache_index, jnp.int32)

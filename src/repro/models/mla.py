@@ -86,25 +86,35 @@ def mla_attention(params: dict, x: jax.Array, *, cfg: ModelConfig,
         ckv_all, krope_all, kv_len = c_kv, k_rope, s
         new_cache = None
     elif page_table is not None:
-        if s != 1:
-            raise ValueError("paged MLA attention is decode-only (S=1)")
         idx = jnp.broadcast_to(
             jnp.asarray(cache_index, jnp.int32).reshape(-1), (b,))
         ps_sz = cache["c_kv"].shape[1]
-        bidx = jnp.arange(b, dtype=jnp.int32)
-        phys = page_table[bidx, idx // ps_sz]
-        off = idx % ps_sz
-        ckv_pool = cache["c_kv"].at[phys, off].set(
-            c_kv[:, 0].astype(cache["c_kv"].dtype))
-        krope_pool = cache["k_rope"].at[phys, off].set(
-            k_rope[:, 0].astype(cache["k_rope"].dtype))
+        if s == 1:
+            bidx = jnp.arange(b, dtype=jnp.int32)
+            phys = page_table[bidx, idx // ps_sz]
+            off = idx % ps_sz
+            ckv_pool = cache["c_kv"].at[phys, off].set(
+                c_kv[:, 0].astype(cache["c_kv"].dtype))
+            krope_pool = cache["k_rope"].at[phys, off].set(
+                k_rope[:, 0].astype(cache["k_rope"].dtype))
+        else:
+            # multi-token (speculative verify): scatter each row's S new
+            # latents through the table; unmapped spans hit the trash page
+            rows = idx[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+            bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+            phys = page_table[bidx, rows // ps_sz]   # (B,S)
+            off = rows % ps_sz
+            ckv_pool = cache["c_kv"].at[phys, off].set(
+                c_kv.astype(cache["c_kv"].dtype))
+            krope_pool = cache["k_rope"].at[phys, off].set(
+                k_rope.astype(cache["k_rope"].dtype))
         new_cache = {"c_kv": ckv_pool, "k_rope": krope_pool}
         n_slot = page_table.shape[1]
         ckv_all = ckv_pool[page_table].reshape(
             b, n_slot * ps_sz, *ckv_pool.shape[2:])
         krope_all = krope_pool[page_table].reshape(
             b, n_slot * ps_sz, *krope_pool.shape[2:])
-        kv_len = idx + 1
+        kv_len = idx + s
     else:
         idx = jnp.asarray(cache_index, jnp.int32)
         if idx.ndim:

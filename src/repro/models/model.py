@@ -695,6 +695,103 @@ class Model:
             jnp.arange(int(k), dtype=jnp.int32))
         return block, cache, pos
 
+    def _has_nonseq_cache_leaves(self) -> bool:
+        """True when any cache leaf carries recurrent / ring state (no
+        ``"seq"`` axis) — those leaves need the speculative restore pass."""
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            self.cache_specs(1, 8),
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+        paged = self.paged_leaf_paths()
+        return any(path_keys(p) not in paged for p, _ in flat)
+
+    def verify_quantum(self, params, tokens, drafts, cache, pos, n_left):
+        """Speculative decode quantum: score a per-row draft block in ONE
+        batched forward and greedily accept the longest matching prefix
+        plus one corrected token.
+
+        ``tokens`` (B,) is each row's last sampled token, ``drafts``
+        (B, d) a drafter's proposed continuation (``d`` static — the
+        serving layer compiles one executable per draft depth).  The
+        d+1-token sequence [token, draft_0, ..., draft_{d-1}] runs as one
+        chunk at per-row start positions ``pos`` (B,) — the same pad-exact
+        machinery as :meth:`prefill_chunk`, so a verify forward costs one
+        sequence-parallel pass instead of d+1 sequential steps.  Greedy
+        acceptance per row: ``accepted`` = length of the longest draft
+        prefix matching the model's own argmax, and the row emits
+        ``n_emit = min(accepted + 1, n_left)`` tokens (the +1 is the
+        corrected/bonus token at the first mismatch; ``n_left`` (B,) is
+        the per-row emission budget, 0 freezes a row).
+
+        Rollback of the d+1 optimistic writes is per cache family:
+
+        * linear KV leaves (attention k/v, MLA latents; dense or paged)
+          keep the pass-1 writes — entries past ``pos + n_emit`` are
+          causally invisible (reads mask ``j <= q_pos``) and the next
+          quantum overwrites them before they ever enter a softmax, the
+          same argument that makes prefill padding exact.  Paged pools:
+          writes beyond the mapped span land on the pinned trash page, so
+          the serving layer caps ``n_left`` at the preflighted span.
+        * recurrent / ring leaves (SSM conv+ssd, RG-LRU h+conv, local
+          window ring) cannot keep optimistic updates, so a second
+          forward from the ORIGINAL cache replays the chunk with per-row
+          ``valid_len = n_emit``: pads are exact no-ops (dt=0 identity
+          recurrence, refused ring writes), leaving each row's state
+          bit-identical to stepping exactly ``n_emit`` tokens.  This is
+          the functional form of snapshot/restore; it is statically
+          skipped for pure linear-KV families.
+
+        Returns ``(block (d+1, B) int32, n_emit (B,), accepted (B,),
+        cache, pos)``; column ``i`` of ``block`` holds the row's emitted
+        tokens in its first ``n_emit[i]`` entries.
+        """
+        cfg = self.cfg
+        tokens = jnp.asarray(tokens, jnp.int32)
+        drafts = jnp.asarray(drafts, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        n_left = jnp.asarray(n_left, jnp.int32)
+        b, d = drafts.shape
+        s = d + 1
+        page_table = cache.get("page_table") if isinstance(cache, dict) \
+            else None
+        caches = cache
+        if page_table is not None:
+            caches = {kk: v for kk, v in cache.items() if kk != "page_table"}
+
+        seq = jnp.concatenate([tokens[:, None], drafts], axis=1)  # (B,d+1)
+        positions = self._default_positions(b, s, pos)
+        x = self._embed_inputs(params, {"tokens": seq}, positions)
+
+        # pass 1: full-validity forward — logits at every candidate
+        x1, cache1, _ = self._run_blocks(
+            params, x, positions=positions, caches=caches, t=pos,
+            valid_len=jnp.full((b,), s, jnp.int32), page_table=page_table)
+        h = L.apply_norm(params["final_norm"], x1, cfg.norm_type)
+        logits = L.unembed(params["embed"], h, cfg)       # (B,d+1,V) fp32
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,d+1)
+
+        match = (g[:, :d] == drafts).astype(jnp.int32)
+        accepted = jnp.sum(jnp.cumprod(match, axis=1), axis=1)    # (B,)
+        n_emit = jnp.minimum(accepted + 1, n_left)
+        n_emit = jnp.where(n_left > 0, n_emit, 0)
+
+        if self._has_nonseq_cache_leaves():
+            # restore pass: exact recurrent/ring state after n_emit tokens
+            _, cache2, _ = self._run_blocks(
+                params, x, positions=positions, caches=caches, t=pos,
+                valid_len=n_emit, page_table=page_table)
+            seq_paths = self.paged_leaf_paths()
+
+            def merge(path, c1, c2):
+                return c1 if path_keys(path) in seq_paths else c2
+            new_cache = jax.tree_util.tree_map_with_path(
+                merge, cache1, cache2)
+        else:
+            new_cache = cache1
+        if page_table is not None:
+            new_cache = dict(new_cache)
+            new_cache["page_table"] = page_table
+        return g.T, n_emit, accepted, new_cache, pos + n_emit
+
 
 @functools.lru_cache(maxsize=None)
 def _cached_model(cfg: ModelConfig) -> Model:

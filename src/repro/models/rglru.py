@@ -91,10 +91,12 @@ def rglru_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
 
     cache = {"h": (B,W) fp32, "conv": (B,conv_width-1,W)}.
 
-    ``valid_len`` (traced scalar): chunked-prefill padding support — for
-    tokens past ``valid_len`` the recurrence is forced to the identity
-    (log a = 0, gated input = 0), so h carries the last *real* token's
-    state bit-exactly, and the conv state stops at that token too."""
+    ``valid_len`` (traced scalar, or (B,) vector for per-row validity —
+    used by the speculative verify restore pass): chunked-prefill padding
+    support — for tokens past ``valid_len`` the recurrence is forced to
+    the identity (log a = 0, gated input = 0), so h carries the last
+    *real* token's state bit-exactly, and the conv state stops at that
+    token too."""
     rg = cfg.rglru
     y_branch = jnp.einsum("bsm,mw->bsw", x, params["w_y"].astype(x.dtype))
     y_branch = jax.nn.gelu(y_branch.astype(jnp.float32),
@@ -113,8 +115,10 @@ def rglru_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
     gated = jnp.sqrt(jnp.maximum(1.0 - a_sq, 1e-12)) * (
         i * u.astype(jnp.float32))
     if valid_len is not None:
-        live = (jnp.arange(x.shape[1])
-                < jnp.asarray(valid_len, jnp.int32))[None, :, None]
+        vl = jnp.asarray(valid_len, jnp.int32)
+        offs = jnp.arange(x.shape[1], dtype=jnp.int32)
+        live = ((offs[None, :] < vl[:, None]) if vl.ndim
+                else (offs < vl)[None, :])[:, :, None]
         log_a = jnp.where(live, log_a, 0.0)
         gated = jnp.where(live, gated, 0.0)
 
@@ -206,22 +210,34 @@ def window_attention_chunk(q: jax.Array, cache: dict, k_new: jax.Array,
 
     q (B,C,H,D): rotated queries at absolute positions t0..t0+C-1;
     k_new/v_new (B,C,K,D) the chunk's keys/values; ``t0``/``valid_len``
-    are traced scalars — only the first ``valid_len`` chunk tokens are
-    real (the rest is bucket padding).  Queries attend both the ring
-    cache (earlier chunks, per-slot absolute positions) and the in-chunk
-    keys under the causal window mask; pad tokens are invisible as keys
-    and are never written back, so padding can never evict a real
-    in-window entry.  Returns (context (B,C,H,D), new_cache)."""
+    are traced scalars, or (B,) vectors when rows sit at different
+    positions / keep different numbers of real tokens (the speculative
+    verify path) — only the first ``valid_len`` chunk tokens are real
+    (the rest is bucket padding).  Queries attend both the ring cache
+    (earlier chunks, per-slot absolute positions) and the in-chunk keys
+    under the causal window mask; pad tokens are invisible as keys and
+    are never written back, so padding can never evict a real in-window
+    entry.  Returns (context (B,C,H,D), new_cache)."""
     b, c, h, d = q.shape
     t0 = jnp.asarray(t0, jnp.int32)
     vl = jnp.asarray(valid_len, jnp.int32)
     offs = jnp.arange(c, dtype=jnp.int32)
-    qpos = t0 + offs                                            # (C,)
+    per_row = bool(t0.ndim or vl.ndim)
+    take = min(c, window)
+    if per_row:
+        t0 = jnp.broadcast_to(t0, (b,))
+        vl = jnp.broadcast_to(vl, (b,))
+        qpos = t0[:, None] + offs[None, :]                      # (B,C)
+        chunk_pos = jnp.where(offs[None, :] < vl[:, None], qpos, -1)
+        qpos_q = qpos[:, :, None]                               # (B,C,1)
+    else:
+        qpos = t0 + offs                                        # (C,)
+        chunk_pos = jnp.broadcast_to(
+            jnp.where(offs < vl, qpos, -1), (b, c))
+        qpos_q = qpos[None, :, None]                            # (1,C,1)
     # one kv sequence: ring slots first (cache["pos"] holds absolute
     # positions, -1 = never written), then the chunk with pads masked out
-    kv_pos = jnp.concatenate(
-        [cache["pos"],
-         jnp.broadcast_to(jnp.where(offs < vl, qpos, -1), (b, c))], axis=1)
+    kv_pos = jnp.concatenate([cache["pos"], chunk_pos], axis=1)
     k_all = jnp.concatenate([cache["k"].astype(q.dtype), k_new], axis=1)
     v_all = jnp.concatenate([cache["v"].astype(q.dtype), v_new], axis=1)
     kh = k_all.shape[2]
@@ -229,8 +245,8 @@ def window_attention_chunk(q: jax.Array, cache: dict, k_new: jax.Array,
     qf = q.reshape(b, c, kh, g, d).astype(jnp.float32) * (d ** -0.5)
     scores = jnp.einsum("bskgd,btkd->bkgst", qf, k_all.astype(jnp.float32))
     valid = ((kv_pos[:, None, :] >= 0)
-             & (kv_pos[:, None, :] <= qpos[None, :, None])
-             & (kv_pos[:, None, :] > qpos[None, :, None] - window))
+             & (kv_pos[:, None, :] <= qpos_q)
+             & (kv_pos[:, None, :] > qpos_q - window))
     scores = jnp.where(valid[:, None, None, :, :], scores, -2.38e38)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v_all.astype(jnp.float32))
@@ -239,7 +255,24 @@ def window_attention_chunk(q: jax.Array, cache: dict, k_new: jax.Array,
     # ring update: the last min(C, window) *real* tokens land at their
     # pos % window slots.  Pads are routed to a throwaway slot appended
     # past the ring (scatter drops it below), so they overwrite nothing.
-    take = min(c, window)
+    if per_row:
+        start = jnp.clip(vl - take, 0, c - take)                # (B,)
+        widx = start[:, None] + jnp.arange(take, dtype=jnp.int32)[None, :]
+        wpos = t0[:, None] + widx                               # (B,take)
+        slots = jnp.where(widx < vl[:, None], jnp.mod(wpos, window), window)
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+
+        def put(buf, upd):
+            padded = jnp.concatenate(
+                [buf, jnp.zeros_like(buf[:, :1])], axis=1)
+            return padded.at[bidx, slots].set(
+                upd.astype(buf.dtype))[:, :window]
+
+        ck = put(cache["k"], k_new[bidx, widx])
+        cv = put(cache["v"], v_new[bidx, widx])
+        cpos = put(cache["pos"][..., None], wpos[..., None])[..., 0]
+        return ctx, {"k": ck, "v": cv, "pos": cpos}
+
     start = jnp.clip(vl - take, 0, c - take)
     widx = start + jnp.arange(take, dtype=jnp.int32)
     wpos = t0 + widx

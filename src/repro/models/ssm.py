@@ -45,11 +45,12 @@ def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
     """Depthwise causal conv.  x (B,S,C), w (W,C).  state (B,W-1,C) holds the
     trailing context from previous steps.  Returns (y, new_state).
 
-    ``valid_len`` (traced scalar, chunked-prefill padding): only the first
-    ``valid_len`` tokens of ``x`` are real — the returned state is the
-    trailing context as of that token, so bucket padding never leaks into
-    later chunks or decode steps.  (Conv *outputs* at padded positions are
-    garbage; callers discard them.)"""
+    ``valid_len`` (traced scalar, or (B,) vector for per-row validity —
+    the speculative verify path accepts a different number of tokens per
+    row): only the first ``valid_len`` tokens of ``x`` are real — the
+    returned state is the trailing context as of that token, so bucket
+    padding never leaks into later chunks or decode steps.  (Conv
+    *outputs* at padded positions are garbage; callers discard them.)"""
     width = w.shape[0]
     if state is None:
         state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
@@ -65,8 +66,14 @@ def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
     else:
         # xp index of real token i is (W-1)+i, so the W-1 entries that
         # precede real position valid_len start at xp index valid_len
-        new_state = jax.lax.dynamic_slice_in_dim(
-            xp, jnp.asarray(valid_len, jnp.int32), width - 1, axis=1)
+        vl = jnp.asarray(valid_len, jnp.int32)
+        if vl.ndim:
+            bidx = jnp.arange(x.shape[0], dtype=jnp.int32)[:, None]
+            rows = vl[:, None] + jnp.arange(width - 1, dtype=jnp.int32)
+            new_state = xp[bidx, rows]
+        else:
+            new_state = jax.lax.dynamic_slice_in_dim(
+                xp, vl, width - 1, axis=1)
     return y, new_state
 
 
@@ -184,10 +191,11 @@ def mamba2_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
                  ) -> tuple[jax.Array, dict | None]:
     """Full Mamba-2 mixer.  cache = {"conv": (B,W-1,C), "ssd": (B,H,P,N)}.
 
-    ``valid_len`` (traced scalar): chunked-prefill padding support — the
-    tokens past ``valid_len`` get dt=0, which makes them *exact* no-ops
-    for the SSD state (decay exp(0*a)=1, input contribution dt*... = 0),
-    and the conv state is taken as of the last real token."""
+    ``valid_len`` (traced scalar, or (B,) vector for per-row validity —
+    the speculative verify restore pass): chunked-prefill padding support
+    — the tokens past ``valid_len`` get dt=0, which makes them *exact*
+    no-ops for the SSD state (decay exp(0*a)=1, input contribution
+    dt*... = 0), and the conv state is taken as of the last real token."""
     ssm = cfg.ssm
     bsz, s, _ = x.shape
     di, g, n, nh, p = (ssm.d_inner, ssm.num_groups, ssm.state_dim,
@@ -205,8 +213,11 @@ def mamba2_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
     c_mat = _expand_groups(xbc[..., di + g * n:].reshape(bsz, s, g, n), nh)
     dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     if valid_len is not None:
-        live = jnp.arange(s) < jnp.asarray(valid_len, jnp.int32)
-        dtv = jnp.where(live[None, :, None], dtv, 0.0)
+        vl = jnp.asarray(valid_len, jnp.int32)
+        offs = jnp.arange(s, dtype=jnp.int32)
+        live = ((offs[None, :] < vl[:, None]) if vl.ndim
+                else (offs < vl)[None, :])
+        dtv = jnp.where(live[:, :, None], dtv, 0.0)
     a = -jnp.exp(params["A_log"])
 
     if cache is not None and s == 1:

@@ -123,6 +123,10 @@ class ClusterMetrics:
     page_stats: dict[str, dict] = dataclasses.field(default_factory=dict)
                                              # per-tenant KV page-pool
                                              # counters ({} on dense engines)
+    spec_stats: dict[str, dict] = dataclasses.field(default_factory=dict)
+                                             # per-tenant speculative-decode
+                                             # counters (zeros on non-spec
+                                             # engines)
 
     @property
     def mean_levels(self) -> dict[str, float]:
@@ -588,8 +592,12 @@ class ClusterRuntime:
                 held.append((st, st.grant, occupancy, steps, row_tokens,
                              t.engine.slots))
                 for req in fin:
-                    finished.append((t.name, req, row_steps.get(req.rid,
-                                                                steps)))
+                    # row_steps is in tokens; a speculative quantum emits
+                    # several per sync, so the finish offset is capped at
+                    # the quantum's clock steps
+                    finished.append((t.name, req,
+                                     min(row_steps.get(req.rid, steps),
+                                         steps)))
                 st.quantum_left -= steps
                 if st.quantum_left <= 0 or not t.engine.active_slots:
                     self._release(st)
@@ -650,7 +658,10 @@ class ClusterRuntime:
                 shed=self.tenant_shed[t.name],
                 deferred=self.tenant_deferred[t.name],
                 peak_cache_tokens=eng.peak_cache_tokens,
-                cache_utilization=eng.cache_utilization)
+                cache_utilization=eng.cache_utilization,
+                tokens_accepted=eng.tokens_accepted,
+                draft_hit_rate=eng.draft_hit_rate,
+                spec_rollbacks=eng.spec_rollbacks)
             all_records.extend(st.records)
             busy += st.busy
             alloc += st.alloc
@@ -658,6 +669,8 @@ class ClusterRuntime:
             peak_cap += (eng.pool.peak_used * eng.page_size
                          if eng.paged and eng.pool is not None
                          else eng.slots * eng.max_len)
+        drafted = sum(t.engine.tokens_drafted for t in self.tenants)
+        accepted = sum(t.engine.tokens_accepted for t in self.tenants)
         aggregate = summarize(all_records, wl.qps,
                               self.conflicts / max(wl.n_queries, 1),
                               busy, alloc,
@@ -666,7 +679,11 @@ class ClusterRuntime:
                               cache_utilization=(peak_tokens / peak_cap
                                                  if peak_cap else 0.0),
                               proxy_rms_error=self.policy.proxy_rms_error,
-                              refit_count=self.policy.proxy_refits)
+                              refit_count=self.policy.proxy_refits,
+                              tokens_accepted=accepted,
+                              draft_hit_rate=accepted / max(drafted, 1),
+                              spec_rollbacks=sum(t.engine.spec_rollbacks
+                                                 for t in self.tenants))
         return ClusterMetrics(
             aggregate=aggregate, per_tenant=per_tenant,
             level_traces={t.name: list(self._state[t.name].levels)
@@ -683,4 +700,6 @@ class ClusterRuntime:
             prefill_quanta={t.name: self._state[t.name].prefill_quanta
                             for t in self.tenants},
             page_stats={t.name: t.engine.page_stats
+                        for t in self.tenants},
+            spec_stats={t.name: t.engine.spec_stats
                         for t in self.tenants})

@@ -50,6 +50,7 @@ from repro.core.counters import CounterBank
 from repro.kernels import dispatch
 from repro.models.model import Model, build_model, cache_batch_axis, path_keys
 from repro.serving.paging import TRASH_PAGE, PagePool
+from repro.serving.speculative import NgramDrafter
 from repro.serving.version_cache import VersionCache
 
 # Fused-quantum executable sizes: a quantum of k decode steps runs as the
@@ -136,6 +137,13 @@ class QuantumHandle:
     traces0: int = -1              # version-cache traces at dispatch
     bucket: int = 0                # K-bucket the executable ran
     tiles: tuple = ()              # tiles key of the dispatched version
+    # speculative quanta: kind == "spec" carries the on-device per-row
+    # emission counts / pure acceptance counts; finish_quantum folds the
+    # synced emission back into n_left so downstream accounting is shared
+    kind: str = "decode"           # "decode" | "spec"
+    emitted: jax.Array | None = None    # (B,) device n_emit (spec only)
+    accepted: jax.Array | None = None   # (B,) device acceptance (spec only)
+    drafted: int = 0               # draft depth dispatched (spec only)
 
 
 class ServingEngine:
@@ -147,7 +155,9 @@ class ServingEngine:
                  prefill_chunk_len: int = PREFILL_CHUNK_LEN,
                  page_size: int | None = None, n_pages: int | None = None,
                  page_reserve: str = "worst", prefix_sharing: bool = True,
-                 ladder=None):
+                 ladder=None, speculative: bool = False,
+                 spec_depth: int = 4, spec_ngram: int = 3,
+                 spec_recurrent: bool = True):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.params = params
@@ -176,7 +186,7 @@ class ServingEngine:
             self._paged_paths = self.model.paged_leaf_paths()
             if not self._paged_paths:
                 raise ValueError(
-                    f"{cfg.arch}: no pageable (linear-KV) cache leaves — "
+                    f"{cfg.name}: no pageable (linear-KV) cache leaves — "
                     "recurrent-state models keep the dense layout")
             self.pages_per_slot = max_len // self.page_size
             if n_pages is None:
@@ -268,6 +278,29 @@ class ServingEngine:
         self.host_syncs = 0
         self.tokens_decoded = 0
         self.quantum_calls = 0
+        # speculative decode quanta: a prompt-lookup drafter proposes up
+        # to spec_depth tokens per row; one batched verify forward scores
+        # them all (Model.verify_quantum) and the longest matching prefix
+        # plus a corrected token is emitted.  Recurrent-state families
+        # need the verify's restore pass; spec_recurrent=False turns
+        # speculation off for them (plain-quantum fallback) instead.
+        self.speculative = bool(speculative)
+        self.spec_depth = int(spec_depth)
+        if self.speculative and self.spec_depth < 1:
+            raise ValueError("spec_depth must be >= 1")
+        self._spec_enabled = self.speculative and (
+            bool(spec_recurrent)
+            or not self.model._has_nonseq_cache_leaves())
+        self.drafter = (NgramDrafter(depth=self.spec_depth,
+                                     max_ngram=int(spec_ngram))
+                        if self.speculative else None)
+        self.spec_quanta = 0       # speculative quanta dispatched
+        self.spec_fallbacks = 0    # spec-eligible dispatches that fell back
+        self.tokens_drafted = 0    # draft tokens submitted to verify
+        self.tokens_accepted = 0   # draft tokens accepted (emitted past the
+                                   # guaranteed corrected token)
+        self.spec_rollbacks = 0    # row-quanta where a draft was rejected
+        self._spec_accept_ewma = 1.0   # emitted tokens per spec dispatch
         self.version_cache = VersionCache(self.model)
         # per-engine row writer: O(row) in-place admission (donated cache +
         # dynamic_update_slice along the batch axis; slot is a traced
@@ -294,6 +327,33 @@ class ServingEngine:
     @property
     def tokens_per_sync(self) -> float:
         return self.tokens_decoded / max(self.host_syncs, 1)
+
+    @property
+    def draft_hit_rate(self) -> float:
+        """Accepted draft tokens / drafted tokens (0.0 before any spec
+        quantum ran)."""
+        return self.tokens_accepted / max(self.tokens_drafted, 1)
+
+    @property
+    def spec_stats(self) -> dict:
+        """Speculative-decode counters for metrics / bench reports."""
+        return {"spec_quanta": self.spec_quanta,
+                "spec_fallbacks": self.spec_fallbacks,
+                "tokens_drafted": self.tokens_drafted,
+                "tokens_accepted": self.tokens_accepted,
+                "draft_hit_rate": self.draft_hit_rate,
+                "spec_rollbacks": self.spec_rollbacks}
+
+    def expected_accept_per_step(self) -> float:
+        """Expected tokens emitted per dispatched decode step (>= 1.0;
+        1.0 exactly for non-speculative engines).  The SLO scheduler's
+        EDF slack math multiplies its step budget by this, so a request
+        whose remaining tokens would not fit the deadline at one
+        token/step stays schedulable when speculation is landing
+        multi-token quanta (an EWMA of recent acceptance)."""
+        if not self._spec_enabled:
+            return 1.0
+        return max(1.0, float(self._spec_accept_ewma))
 
     def tiles_for_level(self, level: float) -> dict:
         """The tile table the compiled source selects at ``level``."""
@@ -383,6 +443,17 @@ class ServingEngine:
             for k in buckets:
                 self.version_cache.quantum(entry, k, self.params,
                                            self.cache, self.slots)
+            if self._spec_enabled:
+                # every reachable (bucket, depth) pair: the dispatch
+                # bucket is the smallest one covering min(k, d+1), so
+                # buckets above that are never requested
+                cap = min(self.spec_depth + 1, self.quantum_buckets[-1])
+                top = next(b for b in self.quantum_buckets if b >= cap)
+                for k in buckets:
+                    if k <= top:
+                        self.version_cache.spec_quantum(
+                            entry, k, self.spec_depth, self.params,
+                            self.cache, self.slots)
             if self.chunked_prefill:
                 for cb in self.prefill_buckets:
                     lg, _ = entry.prefill_chunk(
@@ -1117,6 +1188,13 @@ class ServingEngine:
             # limit) finishing instead of spinning with a zero budget
             n_left[i] = max(1, min(need, room))
             toks[i] = req.output[-1]
+        if fused and self._spec_enabled:
+            handle = self._try_spec_quantum(int(k), active, n_left.copy(),
+                                            toks)
+            if handle is not None:
+                return handle
+            # no usable draft / no room for the d+1 write span: the plain
+            # fused quantum below is the per-row fallback
         if self.paged:
             cap = (1 if not fused else
                    min(int(k), self.quantum_buckets[-1]))
@@ -1159,6 +1237,76 @@ class ServingEngine:
                              active=active, t0=t0, traces0=traces0,
                              bucket=bucket, tiles=self._entry.key)
 
+    def _try_spec_quantum(self, k: int, active: list[int],
+                          n_left: np.ndarray,
+                          toks: np.ndarray) -> QuantumHandle | None:
+        """Dispatch one speculative verify quantum, or return None to
+        fall back to the plain fused quantum (no usable draft anywhere,
+        a row too close to the cache end for the static d+1 write span,
+        or — on paged engines — not enough free-page headroom for the
+        worst-case d+1 writes per row).  The fallback never retraces:
+        both paths run warmed executables."""
+        d = self.spec_depth
+        # the verify writes positions [pos, pos + d] for every active row
+        # regardless of acceptance, so every row needs d steps of room
+        if any(self.max_len - 1 - int(self.slot_pos[i]) < d
+               for i in active):
+            self.spec_fallbacks += 1
+            return None
+        if self.paged and self.decode_k_headroom(d + 1) < d + 1:
+            # free-page headroom clamps the draft depth; with a static
+            # depth that clamp IS the fallback to plain quanta
+            self.spec_fallbacks += 1
+            return None
+        drafts = np.zeros((self.slots, d), np.int32)
+        n_drafted = 0
+        for i in active:
+            req = self.slot_req[i]
+            dr = self.drafter.draft(
+                np.concatenate([np.asarray(req.prompt, np.int32),
+                                np.asarray(req.output, np.int32)]), d)
+            if dr is not None:
+                drafts[i] = dr
+                n_drafted += 1
+        if n_drafted == 0:
+            # adversarial (low-hit-rate) traffic: a verify forward would
+            # emit one token per row for d+1 positions of compute — the
+            # plain quantum is strictly better, so take it
+            self.spec_fallbacks += 1
+            return None
+        cap = min(max(int(k), 1), d + 1, self.quantum_buckets[-1])
+        n_left = np.minimum(n_left, cap)
+        if self.paged:
+            span = np.zeros(self.slots, np.int32)
+            for i in active:
+                span[i] = d + 1
+            span = self._paged_preflight(active, span)
+            # writes past a row's mapped span land on the trash page;
+            # tokens whose KV lives there must never be emitted
+            n_left = np.minimum(n_left, span)
+            if not any(n_left[i] > 0 for i in active):
+                self.spec_fallbacks += 1
+                return None
+        bucket = next(b for b in self.quantum_buckets if b >= cap)
+        sfn = self.version_cache.spec_quantum(
+            self._entry, bucket, d, self.params, self.cache, self.slots)
+        traces0 = self.version_cache.traces
+        t0 = time.perf_counter()
+        block, n_emit, accepted, self.cache, _ = sfn(
+            self.params, jnp.asarray(toks), jnp.asarray(drafts),
+            self.cache, jnp.asarray(self.slot_pos), jnp.asarray(n_left))
+        self.quantum_calls += 1
+        self.spec_quanta += 1
+        self.tokens_drafted += d * len(active)
+        # steps=1: a verify quantum is ONE sequence-parallel forward —
+        # that is the whole speedup — so virtual clocks charge it like a
+        # single decode step while it emits up to min(k, d+1) tokens/row
+        return QuantumHandle(block=block, n_left=n_left, steps=1,
+                             active=active, t0=t0, traces0=traces0,
+                             bucket=bucket, tiles=self._entry.key,
+                             kind="spec", emitted=n_emit,
+                             accepted=accepted, drafted=d)
+
     def finish_quantum(self, handle: QuantumHandle | None) -> list[Request]:
         """Block on a dispatched quantum — the single device->host sync at
         the quantum boundary — and do the request bookkeeping: append each
@@ -1169,14 +1317,34 @@ class ServingEngine:
             return []
         block = np.asarray(handle.block)     # ONE sync for the whole block
         self.host_syncs += 1
+        if handle.kind == "spec":
+            # the block sync above already materialized the quantum; fold
+            # the actual per-row emission into n_left so every consumer
+            # below (and in the runtimes) sees real token counts
+            emitted = np.asarray(handle.emitted).astype(np.int32)
+            accepted = np.asarray(handle.accepted)
+            handle.n_left = emitted
+            d = handle.drafted
+            for i in handle.active:
+                self.tokens_accepted += max(int(emitted[i]) - 1, 0)
+                if int(accepted[i]) < d:
+                    self.spec_rollbacks += 1
+            if handle.active:
+                mean = float(emitted[handle.active].sum()) \
+                    / len(handle.active)
+                self._spec_accept_ewma = (0.8 * self._spec_accept_ewma
+                                          + 0.2 * mean)
         # measured counters: the sync above closed the quantum's device
         # span; observe it unless it was untimed or traced mid-span (a
         # first-visit compile inside the timed region must not read as
-        # interference slowdown — the trace guard drops it)
+        # interference slowdown — the trace guard drops it).  Speculative
+        # quanta observe under their own kind: their wall/token ratio
+        # varies with acceptance, and folding them into "decode" floors
+        # would read as phantom interference slowdown
         if handle.t0 > 0.0 and \
                 handle.traces0 == self.version_cache.traces:
             self.counter_bank.observe(
-                "decode", handle.bucket, handle.tiles,
+                handle.kind, handle.bucket, handle.tiles,
                 time.perf_counter() - handle.t0,
                 tokens=int(handle.n_left.sum()),
                 co_runners=self.co_runner_load)

@@ -541,7 +541,11 @@ class OnlineRuntime:
                 tenant, arrival, _ = meta[req.rid]
                 fin = now
                 if handle is not None and not self.wall_clock:
-                    fin = t_begin + handle.row_steps[req.rid] * self.step_dt
+                    # row_steps is in tokens; a speculative quantum emits
+                    # up to d+1 of them at its single sync, so the finish
+                    # offset is capped at the quantum's clock steps
+                    fin = t_begin + min(handle.row_steps[req.rid],
+                                        handle.steps) * self.step_dt
                 entry = self.book.get(req.rid)
                 tiered = wl.tier_of(tenant) is not None
                 self.records.append(QueryRecord(
@@ -561,4 +565,7 @@ class OnlineRuntime:
                          peak_cache_tokens=self.engine.peak_cache_tokens,
                          cache_utilization=self.engine.cache_utilization,
                          proxy_rms_error=self.policy.proxy_rms_error,
-                         refit_count=self.policy.proxy_refits)
+                         refit_count=self.policy.proxy_refits,
+                         tokens_accepted=self.engine.tokens_accepted,
+                         draft_hit_rate=self.engine.draft_hit_rate,
+                         spec_rollbacks=self.engine.spec_rollbacks)

@@ -130,8 +130,15 @@ def pick_quantum(engine, book: DeadlineBook, now: float, step_dt: float,
     if p_dl <= dkey(best_d)[0]:
         return ("prefill", best_p[0])
     # decode wins now, but end the quantum before the tightest pending
-    # TTFT deadline comes due (each chunk/step costs ~step_dt)
+    # TTFT deadline comes due (each chunk/step costs ~step_dt).  On a
+    # speculative engine a "step" emits ~expected_accept tokens (the
+    # engine's acceptance EWMA), so the same wall slack buys a deeper
+    # token quantum — without this the scheduler would under-fill spec
+    # quanta exactly when drafts are landing
     slack_steps = int((p_dl - now) / step_dt) - best_p[2]
+    tpq = getattr(engine, "expected_accept_per_step", None)
+    if callable(tpq):
+        slack_steps = int(slack_steps * max(1.0, float(tpq())))
     return ("decode", max(1, min(k_mem, slack_steps)))
 
 

@@ -21,7 +21,9 @@ per engine).  Memory footprint: one traced+compiled prefill per prompt
 length warmed plus one decode executable per entry, one chunked-prefill
 executable per (entry, chunk bucket) — the serving admission path, which
 is why mixed-length traffic never retraces after warmup — plus one fused
-quantum-decode executable per (entry, K-bucket) actually used.
+quantum-decode executable per (entry, K-bucket) actually used and, for
+speculative engines, one verify executable per (entry, K-bucket,
+draft-depth).
 
 Donation: the decode and quantum executables donate their cache argument
 (``donate_argnums``), so every step updates the KV/SSM buffers in place
@@ -75,6 +77,11 @@ class VersionEntry:
     # K-bucket -> AOT-compiled fused quantum decode
     #   (params, tokens (B,), cache, pos (B,), n_left (B,)) -> (block, cache, pos)
     quanta: dict[int, Callable] = dataclasses.field(default_factory=dict)
+    # (K-bucket, draft depth) -> AOT-compiled speculative verify quantum
+    #   (params, tokens (B,), drafts (B,d), cache, pos (B,), n_left (B,))
+    #   -> (block (d+1,B), n_emit (B,), accepted (B,), cache, pos)
+    spec: dict[tuple[int, int], Callable] = dataclasses.field(
+        default_factory=dict)
 
 
 class VersionCache:
@@ -186,4 +193,41 @@ class VersionCache:
         fn = (jax.jit(qfn, donate_argnums=(2,))
               .lower(params, vec, cache_sds, vec, vec).compile())
         entry.quanta[k] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    def spec_quantum(self, entry: VersionEntry, k: int, d: int,
+                     params: Any, cache: Any, batch: int) -> Callable:
+        """The speculative verify executable for ``entry``, keyed per
+        (K-bucket, draft depth) — like :meth:`quantum`, AOT-lowered
+        against abstract shapes so warmup pre-builds every reachable
+        (bucket, depth) pair and serve-time level switches stay a dict
+        swap with zero retraces.
+
+        ``k`` statically caps the per-row emission budget (a spec
+        quantum emits at most ``min(k, d+1)`` tokens per row); ``d`` is
+        the static draft depth that fixes the (B, d+1) verify shape."""
+        k, d = int(k), int(d)
+        fn = entry.spec.get((k, d))
+        if fn is not None:
+            self.hits += 1
+            return fn
+        self.misses += 1
+        snap = entry.tiles
+        model = self.model
+
+        def sfn(params, tokens, drafts, cache, pos, n_left):
+            self.traces += 1
+            with dispatch.tile_context(snap):
+                return model.verify_quantum(
+                    params, tokens, drafts, cache, pos,
+                    jnp.minimum(n_left, jnp.int32(k)))
+
+        vec = jax.ShapeDtypeStruct((int(batch),), jnp.int32)
+        mat = jax.ShapeDtypeStruct((int(batch), d), jnp.int32)
+        cache_sds = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+        fn = (jax.jit(sfn, donate_argnums=(3,))
+              .lower(params, vec, mat, cache_sds, vec, vec).compile())
+        entry.spec[(k, d)] = fn
         return fn

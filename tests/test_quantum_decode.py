@@ -146,6 +146,54 @@ def test_quanta_beyond_max_bucket_split_and_stay_exact(setup):
     assert req.output[:10] == want[:10]
 
 
+def test_row_budget_freezes_exactly_at_bucket_edge(setup):
+    """K-bucket boundary: a row whose remaining budget equals the
+    executed bucket exactly must emit precisely that many tokens and
+    freeze — no off-by-one at the pow2 edge, and the next quantum picks
+    it up at the right position."""
+    cfg, model, params, prompts = setup
+    engine = ServingEngine(cfg, params, batch_slots=2, max_len=MAX_LEN,
+                           quantum_buckets=(2, 4))
+    # rid 0 needs exactly 4 more tokens (== the top bucket); rid 1 has
+    # plenty — one fused call must retire rid 0 at the edge exactly
+    r0 = Request(rid=0, prompt=prompts[0], max_new_tokens=4)
+    r1 = Request(rid=1, prompt=prompts[1], max_new_tokens=9)
+    engine.admit_request(r0, drain=True)
+    engine.admit_request(r1, drain=True)
+    h = engine.begin_quantum(4)
+    assert h.steps == 4 and h.bucket == 4
+    fin = engine.finish_quantum(h)
+    assert [r.rid for r in fin] == [0], "rid 0 retires at the edge"
+    assert len(r0.output) == 5            # prefill token + exactly 4
+    assert h.row_steps[0] == 4 and h.row_steps[1] == 4
+    want = _sequential_reference(model, params, prompts[0], 4)
+    assert r0.output == want[:5]
+    while not r1.done:
+        engine.step_quantum(4)
+    assert r1.output == _sequential_reference(model, params,
+                                              prompts[1], 9)[:10]
+
+
+def test_k_beyond_largest_warmed_bucket_selects_top_bucket(setup):
+    """K-bucket boundary: requesting k past the largest warmed bucket
+    dispatches the top bucket's executable (no new compile, no phantom
+    bucket key) and leaves the remainder for further calls."""
+    cfg, _, params, prompts = setup
+    engine = ServingEngine(cfg, params, batch_slots=1, max_len=MAX_LEN,
+                           quantum_buckets=(2, 4))
+    engine.warmup()
+    vc = engine.version_cache
+    misses0 = vc.misses
+    engine.admit_request(Request(rid=0, prompt=prompts[0],
+                                 max_new_tokens=20), drain=True)
+    h = engine.begin_quantum(16)
+    assert h.steps == 4 and h.bucket == 4, "capped at the top bucket"
+    engine.finish_quantum(h)
+    assert vc.misses == misses0, "no executable built past the ladder"
+    for entry in vc._entries.values():
+        assert set(entry.quanta) <= {2, 4}, "no bucket key beyond warmed"
+
+
 def test_mid_quantum_completion_frees_slot_for_next_admission(setup):
     """A row finishing mid-quantum frees its slot at the boundary, and
     the next admission into that slot is pristine (no leaked state from

@@ -25,7 +25,12 @@ sliding-window RMS residual while serving on measured per-quantum
 wall-time counters must stay <= 1.5x the oracle-calibration residual,
 the autotuned tile ladder must serve >= the fixed level table's
 queries-under-QoS (virtual-time exact), and the ladder engine must hold
-zero post-warmup retraces.  Run from the repo root:
+zero post-warmup retraces.  The ``spec`` section gates speculative
+decode quanta: >= SPEC_GAIN_MIN x the plain fused path's wall-clock
+tokens/s on the repetitive workload with token-identical streams and
+zero post-warmup retraces, and >= SPEC_ADVERSARIAL_MIN x on the
+adversarial low-hit-rate workload (drafting must be near-free when it
+misses).  Run from the repo root:
 
     python -m benchmarks.bench_online_serving --tiny
     python tools/check_bench.py
@@ -70,6 +75,16 @@ PAGED_GAIN_MIN = 1.5
 # at least as many queries-under-QoS as the fixed level table (exact:
 # virtual time) with zero post-warmup retraces.
 MEASURED_ERR_MAX = 1.5
+
+# The spec section (ISSUE-9): on the repetitive workload, speculative
+# decode quanta must beat the plain fused path by this factor in warm
+# wall-clock tokens/s (the arm is built to hold a comfortable margin —
+# ~1.5x locally — so the gate survives CI noise), with token-identical
+# streams and zero post-warmup retraces; on the adversarial low-hit-rate
+# workload the draft+fallback overhead must not cost more than this
+# fraction of plain throughput.
+SPEC_GAIN_MIN = 1.3
+SPEC_ADVERSARIAL_MIN = 0.95
 
 
 def check(path: pathlib.Path) -> list[str]:
@@ -122,6 +137,49 @@ def check(path: pathlib.Path) -> list[str]:
     errors.extend(check_slo(data.get("slo")))
     errors.extend(check_paged(data.get("paged")))
     errors.extend(check_measured(data.get("measured")))
+    errors.extend(check_spec(data.get("spec")))
+    return errors
+
+
+def check_spec(s: dict | None) -> list[str]:
+    """The speculative-decode gates (ISSUE-9)."""
+    if not s or "repetitive" not in s or "adversarial" not in s:
+        return ["BENCH_serving.json has no spec section (stale file?) — "
+                "rerun `python -m benchmarks.bench_online_serving --tiny`"]
+    errors = []
+    rep = s["repetitive"]
+    if not rep["speedup_tokens_per_s"] >= SPEC_GAIN_MIN:
+        errors.append(
+            f"speculative decode lost its repetitive-workload win: "
+            f"{rep['spec']['tokens_per_s']} tok/s vs plain fused's "
+            f"{rep['plain']['tokens_per_s']} "
+            f"(x{rep['speedup_tokens_per_s']}, need >= {SPEC_GAIN_MIN}x)")
+    for wl_name in ("repetitive", "adversarial"):
+        if not s[wl_name].get("token_identical", False):
+            errors.append(
+                f"speculative and plain engines produced different token "
+                f"streams on the {wl_name} workload — draft/verify/"
+                "rollback must change the schedule, never the tokens")
+        if s[wl_name]["spec"]["post_warmup_traces"] != 0:
+            errors.append(
+                f"speculative engine retraced after warmup on the "
+                f"{wl_name} workload: "
+                f"{s[wl_name]['spec']['post_warmup_traces']} traces "
+                "(warmup must prebuild every (K-bucket, depth) verify "
+                "executable)")
+    if rep["spec"].get("spec_quanta", 0) <= 0:
+        errors.append(
+            "the repetitive arm dispatched zero speculative quanta — the "
+            "speedup comparison is vacuous (spec path never engaged)")
+    adv = s["adversarial"]
+    ratio = adv["spec"]["tokens_per_s"] \
+        / max(adv["plain"]["tokens_per_s"], 1e-9)
+    if not ratio >= SPEC_ADVERSARIAL_MIN:
+        errors.append(
+            f"speculation is no longer near-free when drafts miss: "
+            f"adversarial arm at {ratio:.2f}x plain throughput "
+            f"(need >= {SPEC_ADVERSARIAL_MIN}x — draft cost or fallback "
+            "overhead crept into the serving path)")
     return errors
 
 
@@ -196,6 +254,27 @@ def check_slo(s: dict | None) -> list[str]:
     if s.get("common_requests", 0) <= 0:
         errors.append("fifo and slo arms served no common requests — the "
                       "token-identity check is vacuous")
+    sp = s.get("slo_spec")
+    if not sp:
+        errors.append("slo section has no slo_spec arm (stale file?) — "
+                      "rerun `python -m benchmarks.bench_online_serving "
+                      "--tiny`")
+    else:
+        # speculation jitters EDF's quantum picks (expected-accept slack
+        # scaling), so its qps_at_qos is not bit-equal to the plain slo
+        # arm's; the invariant that matters is that the PR-6 headline
+        # win survives with speculation on
+        if not sp["qps_at_qos"] >= SLO_GAIN_MIN * fifo_q:
+            errors.append(
+                f"speculation broke the SLO scheduler's "
+                f"queries-under-QoS win: {sp['qps_at_qos']} qps_at_qos "
+                f"vs fifo's {fifo_q} (need >= {SLO_GAIN_MIN}x — the "
+                f"plain slo arm holds {slo_q})")
+        if not s.get("spec_token_identical", False):
+            errors.append(
+                "slo and slo_spec arms produced different token streams "
+                "on commonly-served requests — speculation must change "
+                "the schedule, never the tokens")
     return errors
 
 
@@ -269,7 +348,10 @@ def main() -> int:
               f"qps_at_qos; tiers "
               + "/".join(f"{t}={rates[t]}" for t in SLO_TIER_ORDER
                          if t in rates)
-              + f"; token_identical={s['token_identical']})")
+              + f"; token_identical={s['token_identical']}"
+              + (f"; with speculation "
+                 f"{s['slo_spec']['qps_at_qos']} qps_at_qos"
+                 if s.get("slo_spec") else "") + ")")
     if data.get("paged"):
         p = data["paged"]
         print(f"bench gate: paged KV cache sustains "
@@ -294,6 +376,18 @@ def main() -> int:
               f"queries-under-QoS with "
               f"{mm['ladder']['autotuned']['post_warmup_traces']} "
               f"post-warmup traces")
+    if data.get("spec"):
+        sp = data["spec"]
+        rep, adv = sp["repetitive"], sp["adversarial"]
+        print(f"bench gate: speculative decode serves "
+              f"{rep['speedup_tokens_per_s']}x the plain fused tokens/s "
+              f"on the repetitive workload "
+              f"({rep['spec']['tokens_per_s']} vs "
+              f"{rep['plain']['tokens_per_s']} tok/s; hit rate "
+              f"{rep['spec']['draft_hit_rate']}; "
+              f"{rep['spec']['post_warmup_traces']} post-warmup traces; "
+              f"token_identical={rep['token_identical']}); adversarial "
+              f"arm at {adv['speedup_tokens_per_s']}x plain")
     return 0
 
 

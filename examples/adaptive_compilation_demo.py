@@ -38,9 +38,12 @@ def main():
         print(f"  level={lvl:.1f} -> tile=({v.bm},{v.bk},{v.bn}) "
               f"lat={lat*1e6:.0f}us")
         # this is the hook the TPU serving engine uses: install the
-        # selected version's tile as the Pallas kernel override
-        dispatch.set_tile_overrides("matmul", bm=min(v.bm, 256),
-                                    bk=min(v.bk, 512), bn=min(v.bn, 256))
+        # selected version's tile as the Pallas kernel override — the
+        # whole-table installer swaps atomically, so a concurrent trace
+        # never observes a half-updated override table
+        dispatch.install_tile_overrides(
+            {"matmul": {"bm": min(v.bm, 256), "bk": min(v.bk, 512),
+                        "bn": min(v.bn, 256)}})
     dispatch.clear_tile_overrides()
 
 

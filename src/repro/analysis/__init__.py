@@ -1,0 +1,19 @@
+"""repro.analysis — static invariant checking for the serving hot path.
+
+A stdlib-``ast`` analyzer (no runtime imports of the checked code, no
+new dependencies) that turns the repo's dynamic serving invariants —
+one host sync per quantum, donated-buffer discipline, zero post-warmup
+retraces, paged-leaf coverage, atomic tile-table swaps — into CI-gated
+static rules.  See ``docs/ARCHITECTURE.md`` §11 for the rule catalog
+and suppression syntax; the CLI lives at ``tools/check_static.py``.
+
+Suppress a finding in place with::
+
+    # veltair: ignore[rule-id] one-line justification
+"""
+from repro.analysis.base import (AnalysisContext, Rule, Violation,
+                                 all_rules, register)
+from repro.analysis.runner import Report, iter_python_files, run
+
+__all__ = ["AnalysisContext", "Rule", "Violation", "all_rules",
+           "register", "Report", "iter_python_files", "run"]

@@ -1,0 +1,255 @@
+"""A heuristic, whole-corpus call graph over the scanned files.
+
+The graph is deliberately approximate — this is a linter, not a type
+checker.  Names are resolved in four passes of decreasing confidence:
+
+1. ``self.method(...)`` → a method on the same class.
+2. A local/imported name (``from repro.x import y``; ``import m as z``)
+   → the function/class it binds in the corpus.
+3. ``self.attr.meth(...)`` → ``Class.meth`` when ``attr``'s class is
+   known from a ``self.attr = ClassName(...)`` assignment or a class
+   annotation anywhere in the corpus.
+4. A unique bare method name across the whole corpus (skipped when the
+   name is defined in more than one class — ambiguity beats noise).
+
+Calls inside nested ``def``s (jit closures such as the quantum body in
+``VersionCache.quantum``) are attributed to the outermost enclosing
+function, so trace-time model code is pulled into hot-path slices.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from repro.analysis import astutil
+from repro.analysis.astutil import SourceFile
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One top-level function or method in the corpus."""
+    qual: str                      # "module:Class.method" or "module:func"
+    sf: SourceFile
+    node: ast.AST                  # FunctionDef / AsyncFunctionDef
+    cls: str | None                # owning class name, if a method
+
+
+class CallGraph:
+    def __init__(self, files: list[SourceFile]):
+        self.files = [f for f in files if f.tree is not None]
+        self.functions: dict[str, FunctionInfo] = {}
+        # method name -> list of quals that define it (for passes 1 & 4)
+        self.by_method: dict[str, list[str]] = {}
+        # bare function name -> list of quals (for pass 2 resolution)
+        self.by_name: dict[str, list[str]] = {}
+        # class name -> {method name -> qual}
+        self.classes: dict[str, dict[str, str]] = {}
+        # attr name -> class name, learned from `self.attr = Class(...)`
+        # and `attr: Class` annotations, corpus-wide
+        self.attr_types: dict[str, str] = {}
+        self.edges: dict[str, set[str]] = {}
+        self._import_cache: dict[str, dict[str, str]] = {}
+        self._index()
+        self._infer_attr_types()
+        self._build_edges()
+
+    # -- indexing -----------------------------------------------------
+    def _index(self) -> None:
+        for sf in self.files:
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if astutil.enclosing_function(node) is not None:
+                    continue  # nested def: owned by its outer function
+                qualname = astutil.func_qualname(node)
+                cls = None
+                owner = astutil.enclosing(node, ast.ClassDef)
+                if isinstance(owner, ast.ClassDef):
+                    cls = owner.name
+                qual = f"{sf.module}:{qualname}"
+                info = FunctionInfo(qual=qual, sf=sf, node=node, cls=cls)
+                self.functions[qual] = info
+                self.by_name.setdefault(node.name, []).append(qual)
+                if cls is not None:
+                    self.by_method.setdefault(node.name, []).append(qual)
+                    self.classes.setdefault(cls, {})[node.name] = qual
+
+    def _infer_attr_types(self) -> None:
+        class_names = set(self.classes)
+        for sf in self.files:
+            for node in ast.walk(sf.tree):
+                # self.attr = ClassName(...)
+                if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                    tgt = node.targets[0]
+                    if (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"
+                            and isinstance(node.value, ast.Call)):
+                        cname = astutil.dotted_name(node.value.func)
+                        if cname:
+                            tail = cname.split(".")[-1]
+                            if tail in class_names:
+                                self.attr_types[tgt.attr] = tail
+                # attr: ClassName  (class-level or self.attr annotation)
+                if isinstance(node, ast.AnnAssign):
+                    tgt = node.target
+                    attr = None
+                    if isinstance(tgt, ast.Name):
+                        attr = tgt.id
+                    elif (isinstance(tgt, ast.Attribute)
+                          and isinstance(tgt.value, ast.Name)
+                          and tgt.value.id == "self"):
+                        attr = tgt.attr
+                    if attr is not None:
+                        ann = astutil.dotted_name(node.annotation)
+                        if ann:
+                            tail = ann.split(".")[-1]
+                            if tail in class_names:
+                                self.attr_types[attr] = tail
+        # constructor-style "engine = ServingEngine(...)" locals too:
+        for sf in self.files:
+            for node in ast.walk(sf.tree):
+                if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and isinstance(node.value, ast.Call)):
+                    cname = astutil.dotted_name(node.value.func)
+                    if cname and cname.split(".")[-1] in class_names:
+                        self.attr_types.setdefault(
+                            node.targets[0].id, cname.split(".")[-1])
+
+    # -- name resolution ----------------------------------------------
+    def _imports_of(self, sf: SourceFile) -> dict[str, str]:
+        """local alias -> dotted module or module.symbol target."""
+        out: dict[str, str] = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Import):
+                for al in node.names:
+                    out[al.asname or al.name.split(".")[0]] = al.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for al in node.names:
+                    out[al.asname or al.name] = f"{node.module}.{al.name}"
+        return out
+
+    def _resolve_call(self, sf: SourceFile, imports: dict[str, str],
+                      caller: FunctionInfo, call: ast.Call) -> str | None:
+        fn = call.func
+        # self.method(...)
+        if (isinstance(fn, ast.Attribute) and isinstance(fn.value, ast.Name)
+                and fn.value.id == "self" and caller.cls is not None):
+            hit = self.classes.get(caller.cls, {}).get(fn.attr)
+            if hit:
+                return hit
+            # inherited / mixin method: fall through to unique-name pass
+        name = astutil.dotted_name(fn)
+        if name is None and isinstance(fn, ast.Attribute):
+            name = fn.attr  # x().meth / x[0].meth → bare method name
+        if name is None:
+            return None
+        parts = name.split(".")
+        # bare local or imported function name
+        if len(parts) == 1:
+            target = imports.get(parts[0], parts[0])
+            tail = target.split(".")[-1]
+            mod = ".".join(target.split(".")[:-1])
+            for qual in self.by_name.get(tail, []):
+                info = self.functions[qual]
+                if info.cls is None and (not mod
+                                         or info.sf.module == mod
+                                         or qual.startswith(mod + ":")):
+                    return qual
+            # class constructor → __init__
+            if tail in self.classes:
+                return self.classes[tail].get("__init__")
+            cand = self.by_name.get(parts[0], [])
+            if len(cand) == 1:
+                return cand[0]
+            return None
+        # obj.meth(...) or module.func(...) or self.attr.meth(...)
+        head, meth = parts[0], parts[-1]
+        if head == "self" and len(parts) >= 3:
+            head = parts[1]  # self.attr.meth → attr's class
+        cls = self.attr_types.get(head)
+        if cls:
+            hit = self.classes.get(cls, {}).get(meth)
+            if hit:
+                return hit
+        # module alias: mod.func
+        target = imports.get(head)
+        if target:
+            for qual in self.by_name.get(meth, []):
+                info = self.functions[qual]
+                if info.sf.module == target or info.sf.module.endswith(
+                        "." + target.split(".")[-1]):
+                    if info.cls is None:
+                        return qual
+            if meth in self.classes:  # mod.ClassName(...)
+                return self.classes[meth].get("__init__")
+        # unique method name across corpus (last resort; skip ambiguous)
+        cand = self.by_method.get(meth, [])
+        if len(cand) == 1:
+            return cand[0]
+        return None
+
+    def _build_edges(self) -> None:
+        for qual, info in self.functions.items():
+            imports = self._imports_of(info.sf)
+            callees: set[str] = set()
+            for node in ast.walk(info.node):
+                if isinstance(node, ast.Call):
+                    tgt = self._resolve_call(info.sf, imports, info, node)
+                    if tgt and tgt != qual:
+                        callees.add(tgt)
+            self.edges[qual] = callees
+
+    # -- queries ------------------------------------------------------
+    def resolve(self, caller_qual: str, call: ast.Call) -> str | None:
+        """Public resolution entry point for rules: resolve ``call``
+        made inside ``caller_qual`` to a corpus function qual."""
+        info = self.functions.get(caller_qual)
+        if info is None:
+            return None
+        imports = self._import_cache.get(info.sf.module)
+        if imports is None:
+            imports = self._imports_of(info.sf)
+            self._import_cache[info.sf.module] = imports
+        return self._resolve_call(info.sf, imports, info, call)
+
+    def find(self, suffix: str) -> list[str]:
+        """All quals whose ``module:Qual.name`` ends with ``suffix``
+        (match on Class.method or function-name boundaries)."""
+        out = []
+        for qual in self.functions:
+            tail = qual.split(":", 1)[1]
+            if tail == suffix or tail.endswith("." + suffix):
+                out.append(qual)
+        return out
+
+    def reachable(self, roots: list[str]) -> set[str]:
+        seen: set[str] = set()
+        stack = [r for r in roots if r in self.functions]
+        while stack:
+            cur = stack.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            stack.extend(self.edges.get(cur, ()))
+        return seen
+
+    def callers_of(self, qual: str) -> set[str]:
+        return {src for src, dsts in self.edges.items() if qual in dsts}
+
+    def connected(self, roots: list[str]) -> set[str]:
+        """Reachable-from-roots plus transitive callers of roots (used
+        for the paged-leaf rule, where helpers both call and are called
+        by the ``cache_specs`` anchor)."""
+        seen = self.reachable(roots)
+        frontier = [r for r in roots if r in self.functions]
+        back: set[str] = set(frontier)
+        while frontier:
+            cur = frontier.pop()
+            for caller in self.callers_of(cur):
+                if caller not in back:
+                    back.add(caller)
+                    frontier.append(caller)
+        return seen | back

@@ -1,0 +1,300 @@
+"""Rule 2 — ``use-after-donation``.
+
+``donate_argnums`` hands a buffer to XLA: after the call, the Python
+binding still points at the now-invalid array, and any later read is
+silently garbage (or an error under ``jax_debug_donations``).  The
+serving path leans on donation everywhere — the decode/quantum
+executables donate the cache (PR 4), the row writers donate position 0
+— so a use-after-donation is exactly the "corrupted shared buffer"
+failure mode VELTAIR's QoS argument assumes away.
+
+The rule tracks three ways a donated callable reaches a call site:
+
+* directly: ``fn = jax.jit(f, donate_argnums=(2,))`` (optionally via
+  ``.lower(...).compile()``);
+* through a factory: a corpus function that *returns* a donated
+  callable (``_make_row_writer``, ``VersionCache.quantum``) marks its
+  call results as donated;
+* through an attribute: ``self._row_writer = self._make_row_writer()``
+  or ``VersionEntry(decode=jax.jit(..., donate_argnums=(2,)))`` mark
+  the attribute name, and ``entry.decode`` / alias reads inherit it.
+
+Within each function the scan is linear in source order: passing a
+name (or dotted path such as ``self.cache``) at a donated position
+consumes it; a read before the next rebind is a violation.  Rebinding
+in the *same* statement (``self.cache = writer(self.cache, ...)`` — the
+repo idiom) is clean by construction.  The scan is flow-insensitive
+across branches, which is the usual linter trade-off.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.base import AnalysisContext, Rule, Violation, register
+
+_JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+
+
+def _donate_positions(call: ast.Call) -> tuple[int, ...] | None:
+    """Donated argnums of a jit call, or None if it doesn't donate (or
+    donates non-literally, which we conservatively skip)."""
+    for kw in call.keywords:
+        if kw.arg in {"donate_argnums", "donate"}:
+            v = astutil.int_const(kw.value)
+            if v is not None:
+                return (v,)
+            tup = astutil.const_str_tuple(kw.value)
+            if tup is not None and all(isinstance(x, int) for x in tup):
+                return tuple(tup)
+            return ()   # donates, positions unknown → track as donated
+    return None
+
+
+def _unwrap_aot(node: ast.AST) -> ast.AST:
+    """Peel ``.lower(...).compile()`` / ``.compile()`` wrappers so the
+    inner ``jax.jit(...)`` call is visible."""
+    while (isinstance(node, ast.Call)
+           and isinstance(node.func, ast.Attribute)
+           and node.func.attr in {"lower", "compile"}):
+        node = node.func.value
+    return node
+
+
+def _donated_jit_expr(node: ast.AST) -> tuple[int, ...] | None:
+    inner = _unwrap_aot(node)
+    if isinstance(inner, ast.Call):
+        name = astutil.dotted_name(inner.func)
+        if name in _JIT_NAMES:
+            return _donate_positions(inner)
+    return None
+
+
+def _iter_stmts(fn: ast.AST):
+    """Statements of ``fn`` in source order, excluding nested ``def``
+    bodies (donation consumes in the *caller's* frame; the traced
+    closure legitimately reads its own parameters)."""
+    def walk(body):
+        for stmt in body:
+            yield stmt
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for name in ("body", "orelse", "finalbody"):
+                sub = getattr(stmt, name, None)
+                if isinstance(sub, list):
+                    yield from walk(sub)
+            for handler in getattr(stmt, "handlers", []) or []:
+                yield from walk(handler.body)
+    yield from walk(fn.body)  # type: ignore[union-attr]
+
+
+def _stmt_scan_roots(stmt: ast.stmt) -> list[ast.AST]:
+    """The sub-expressions belonging to *this* statement alone: compound
+    statements contribute only their header (iter/test/context), because
+    their body statements are visited separately by ``_iter_stmts``."""
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.iter]
+    if isinstance(stmt, (ast.While, ast.If)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        return [item.context_expr for item in stmt.items]
+    if isinstance(stmt, (ast.Try, ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef)):
+        return []
+    return [stmt]
+
+
+def _calls_in(stmt: ast.stmt):
+    """Call nodes belonging to a statement (header-only for compound
+    statements), excluding nested function bodies."""
+    stack = list(_stmt_scan_roots(stmt))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not stmt:
+            continue
+        if isinstance(node, ast.Call):
+            yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class DonationRule(Rule):
+    rule_id = "use-after-donation"
+    description = ("no read of a binding after it was passed at a "
+                   "donate_argnums position")
+
+    def check(self, ctx: AnalysisContext) -> list[Violation]:
+        factories = self._find_factories(ctx)
+        attr_donated = self._find_donated_attrs(ctx, factories)
+        out: list[Violation] = []
+        for qual, info in sorted(ctx.graph.functions.items()):
+            out.extend(self._scan_function(
+                ctx, qual, info, factories, attr_donated))
+        return out
+
+    # -- corpus passes ------------------------------------------------
+    def _find_factories(self, ctx: AnalysisContext) -> dict[str, tuple]:
+        """Functions that return a donated callable → donated positions.
+        Two fixed-point iterations cover factory-of-factory chains."""
+        factories: dict[str, tuple] = {}
+        for _ in range(2):
+            for qual, info in ctx.graph.functions.items():
+                local: dict[str, tuple] = {}
+                for stmt in _iter_stmts(info.node):
+                    if isinstance(stmt, ast.Assign) and len(
+                            stmt.targets) == 1 and isinstance(
+                            stmt.targets[0], ast.Name):
+                        pos = self._donated_value(
+                            ctx, qual, stmt.value, local, factories, {})
+                        if pos is not None:
+                            local[stmt.targets[0].id] = pos
+                    if isinstance(stmt, ast.Return) and stmt.value:
+                        pos = self._donated_value(
+                            ctx, qual, stmt.value, local, factories, {})
+                        if pos is not None:
+                            factories[qual] = pos
+        return factories
+
+    def _find_donated_attrs(self, ctx: AnalysisContext,
+                            factories: dict[str, tuple]) -> dict[str, tuple]:
+        """Attribute/field names bound to donated callables anywhere:
+        ``self.x = <donated>`` and ``Cls(field=<donated>)``."""
+        attrs: dict[str, tuple] = {}
+        for qual, info in ctx.graph.functions.items():
+            for stmt in _iter_stmts(info.node):
+                if isinstance(stmt, ast.Assign) and len(
+                        stmt.targets) == 1 and isinstance(
+                        stmt.targets[0], ast.Attribute):
+                    pos = self._donated_value(
+                        ctx, qual, stmt.value, {}, factories, {})
+                    if pos is not None:
+                        attrs[stmt.targets[0].attr] = pos
+                for call in _calls_in(stmt):
+                    for kw in call.keywords:
+                        if kw.arg is None:
+                            continue
+                        pos = _donated_jit_expr(kw.value)
+                        if pos is not None:
+                            attrs[kw.arg] = pos
+        return attrs
+
+    def _donated_value(self, ctx, qual, value, local, factories,
+                       attr_donated) -> tuple | None:
+        """Donation positions of an expression, or None."""
+        pos = _donated_jit_expr(value)
+        if pos is not None:
+            return pos
+        if isinstance(value, ast.Name) and value.id in local:
+            return local[value.id]
+        if isinstance(value, ast.Attribute) and \
+                value.attr in attr_donated:
+            return attr_donated[value.attr]
+        if isinstance(value, ast.Call):
+            tgt = ctx.graph.resolve(qual, value)
+            if tgt and tgt in factories:
+                return factories[tgt]
+        return None
+
+    # -- per-function scan --------------------------------------------
+    def _scan_function(self, ctx, qual, info, factories,
+                       attr_donated) -> list[Violation]:
+        out: list[Violation] = []
+        local: dict[str, tuple] = {}        # name -> donated positions
+        consumed: dict[str, int] = {}       # binding path -> call line
+        for stmt in _iter_stmts(info.node):
+            # 1. reads of already-consumed bindings (header-only for
+            #    compound statements — bodies are visited on their own)
+            stack = list(_stmt_scan_roots(stmt))
+            while stack:
+                node = stack.pop()
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)) and node is not stmt:
+                    continue
+                stack.extend(ast.iter_child_nodes(node))
+                path = None
+                if isinstance(node, ast.Name) and isinstance(
+                        node.ctx, ast.Load):
+                    path = node.id
+                elif isinstance(node, ast.Attribute) and isinstance(
+                        node.ctx, ast.Load):
+                    path = astutil.dotted_name(node)
+                if path and path in consumed:
+                    out.append(self.violation(
+                        info.sf, node,
+                        f"`{path}` read after being donated at line "
+                        f"{consumed[path]} (buffer is invalid after "
+                        f"donation)"))
+                    consumed.pop(path, None)  # one report per donation
+            # 2. consumption at donated positions
+            newly: dict[str, int] = {}
+            for call in _calls_in(stmt):
+                pos = self._call_donates(ctx, qual, call, local,
+                                         attr_donated, factories)
+                if not pos:
+                    continue
+                for p in pos:
+                    if p < len(call.args):
+                        arg = call.args[p]
+                        path = (arg.id if isinstance(arg, ast.Name)
+                                else astutil.dotted_name(arg)
+                                if isinstance(arg, ast.Attribute)
+                                else None)
+                        if path:
+                            newly[path] = call.lineno
+            # 3. rebinds clear consumption (same-statement rebind of the
+            #    donated arg — the repo idiom — never flags)
+            for tgt in self._stmt_targets(stmt):
+                newly.pop(tgt, None)
+                consumed.pop(tgt, None)
+                local.pop(tgt, None)
+            consumed.update(newly)
+            # 4. track donated-callable bindings (after the rebind pass,
+            #    so this statement's own target is not wiped)
+            if isinstance(stmt, ast.Assign) and len(
+                    stmt.targets) == 1 and isinstance(
+                    stmt.targets[0], ast.Name):
+                pos = self._donated_value(
+                    ctx, qual, stmt.value, local, factories, attr_donated)
+                if pos is not None:
+                    local[stmt.targets[0].id] = pos
+        return out
+
+    def _call_donates(self, ctx, qual, call, local, attr_donated,
+                      factories) -> tuple | None:
+        """Donated positions if ``call`` invokes a donated callable."""
+        fn = call.func
+        if isinstance(fn, ast.Name) and fn.id in local:
+            return local[fn.id]
+        if isinstance(fn, ast.Attribute) and fn.attr in attr_donated:
+            return attr_donated[fn.attr]
+        inner = _donated_jit_expr(fn)   # jax.jit(f, donate...)(args)
+        if inner is not None:
+            return inner
+        return None
+
+    def _stmt_targets(self, stmt: ast.stmt) -> list[str]:
+        out: list[str] = []
+        targets: list = []
+        if isinstance(stmt, ast.Assign):
+            targets = list(stmt.targets)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            targets = [stmt.target]
+        elif isinstance(stmt, ast.For):
+            targets = [stmt.target]
+        for tgt in targets:
+            stack = [tgt]
+            while stack:
+                t = stack.pop()
+                if isinstance(t, ast.Name):
+                    out.append(t.id)
+                elif isinstance(t, ast.Attribute):
+                    d = astutil.dotted_name(t)
+                    if d:
+                        out.append(d)
+                elif isinstance(t, (ast.Tuple, ast.List, ast.Starred)):
+                    stack.extend(getattr(t, "elts", None)
+                                 or [t.value])
+        return out
+
+
+register(DonationRule())

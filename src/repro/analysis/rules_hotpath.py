@@ -1,0 +1,245 @@
+"""Rule 1 — ``host-sync-in-hot-path``.
+
+The serving contract (PR 4 onward) is *one* host sync per quantum: the
+single ``np.asarray(handle.block)`` in ``finish_quantum`` (and the one
+argmax coercion per admission).  Anything else that forces a
+device→host transfer inside the quantum hot path — ``.item()``,
+``int()/float()/bool()`` on a device value, ``np.asarray`` of a device
+value, ``jax.device_get``, ``.block_until_ready()``, or an implicit
+``if tracer:`` truth test — serializes the pipeline and destroys the
+co-location win the paper measures.
+
+The hot path is the call-graph slice rooted at the serving entry
+points below.  Calls inside nested ``def``s (the jit closures in
+``VersionCache``) are attributed to their outer function, so traced
+model code is audited too.  Sanctioned syncs carry
+``# veltair: ignore[host-sync-in-hot-path] <why>`` at the site.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.base import AnalysisContext, Rule, Violation, register
+
+# Call-graph roots: matched by qualname suffix so fixture-sized repros
+# (a mini ServingEngine in one file) slice the same way the repo does.
+HOT_ROOTS = (
+    "ServingEngine.begin_quantum",
+    "ServingEngine.step_quantum",
+    "ServingEngine.finish_quantum",
+    "ServingEngine.prefill_step",
+    "ServingEngine.admit_request",
+    "VersionCache.get",
+    "VersionCache.quantum",
+    "VersionCache.spec_quantum",
+    "OnlineRuntime.serve",
+    "ClusterRuntime.serve",
+)
+
+# Attribute access on these never yields a device value.
+_METADATA_ATTRS = {"shape", "dtype", "ndim", "size", "weak_type",
+                   "sharding", "itemsize", "nbytes"}
+
+# numpy aliases whose calls produce *host* values (and whose asarray/
+# array calls on device values are sinks).
+_NP_HEADS = {"np", "numpy"}
+
+
+def _is_jax_array_annotation(ann: ast.AST | None) -> bool:
+    """Does the annotation mention ``jax.Array`` (possibly in a union)?"""
+    if ann is None:
+        return False
+    for node in ast.walk(ann):
+        if astutil.dotted_name(node) == "jax.Array":
+            return True
+        if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+                and "jax.Array" in node.value:
+            return True
+    return False
+
+
+def device_attr_names(ctx: AnalysisContext) -> set[str]:
+    """Attribute names annotated ``jax.Array`` anywhere in the corpus
+    (e.g. ``QuantumHandle.block``) — reading them yields device values."""
+    out: set[str] = set()
+    for sf in ctx.parsed():
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.AnnAssign) and isinstance(
+                    node.target, ast.Name):
+                if _is_jax_array_annotation(node.annotation):
+                    out.add(node.target.id)
+    return out
+
+
+class TaintScan:
+    """Forward may-taint pass over one function body.  ``tainted`` holds
+    local names bound to device values; expression taint is recomputed
+    structurally on demand."""
+
+    def __init__(self, device_attrs: set[str]):
+        self.device_attrs = device_attrs
+        self.tainted: set[str] = set()
+
+    def expr_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _METADATA_ATTRS:
+                return False
+            if node.attr in self.device_attrs:
+                return True
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Call):
+            name = astutil.dotted_name(node.func) or ""
+            head = name.split(".")[0]
+            if head in _NP_HEADS:
+                return False           # numpy results live on host
+            if head in {"jnp", "jax", "lax"} or name.startswith(
+                    "jax.numpy"):
+                return name != "jax.device_get"
+            if head in {"int", "float", "bool", "len", "range", "str"}:
+                return False           # host coercions (the sinks)
+            if isinstance(node.func, ast.Attribute):
+                # method call: logits.max(), handle.block.astype(...)
+                if node.func.attr in {"item", "tolist", "block_until_ready"}:
+                    return False       # these land on host
+                if self.expr_tainted(node.func.value):
+                    return True
+            return any(self.expr_tainted(a) for a in node.args)
+        if isinstance(node, (ast.BinOp,)):
+            return self.expr_tainted(node.left) or self.expr_tainted(
+                node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr_tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.expr_tainted(node.left) or any(
+                self.expr_tainted(c) for c in node.comparators)
+        if isinstance(node, ast.IfExp):
+            return self.expr_tainted(node.body) or self.expr_tainted(
+                node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Starred):
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.NamedExpr):
+            return self.expr_tainted(node.value)
+        return False
+
+    def _bind(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind(el, tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted)
+
+    def seed_params(self, fn: ast.AST) -> None:
+        args = fn.args  # type: ignore[union-attr]
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)):
+            if _is_jax_array_annotation(a.annotation):
+                self.tainted.add(a.arg)
+
+    def run(self, fn: ast.AST) -> None:
+        """Two forward passes so loop-carried taint stabilizes."""
+        self.seed_params(fn)
+        for _ in range(2):
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    t = self.expr_tainted(node.value)
+                    for tgt in node.targets:
+                        self._bind(tgt, t)
+                elif isinstance(node, ast.AnnAssign) and node.value:
+                    t = self.expr_tainted(node.value) or \
+                        _is_jax_array_annotation(node.annotation)
+                    self._bind(node.target, t)
+                elif isinstance(node, ast.AugAssign):
+                    if self.expr_tainted(node.value):
+                        self._bind(node.target, True)
+                elif isinstance(node, ast.For):
+                    self._bind(node.target, self.expr_tainted(node.iter))
+
+
+class HostSyncRule(Rule):
+    rule_id = "host-sync-in-hot-path"
+    description = ("no device→host transfer inside the quantum hot path "
+                   "(one sanctioned sync per quantum)")
+
+    def check(self, ctx: AnalysisContext) -> list[Violation]:
+        device_attrs = device_attr_names(ctx)
+        roots: list[str] = []
+        for suffix in HOT_ROOTS:
+            roots.extend(ctx.graph.find(suffix))
+        hot = ctx.graph.reachable(roots)
+        out: list[Violation] = []
+        for qual in sorted(hot):
+            info = ctx.graph.functions[qual]
+            scan = TaintScan(device_attrs)
+            scan.run(info.node)
+            out.extend(self._scan_sinks(info.sf, info.node, scan, qual))
+        return out
+
+    def _scan_sinks(self, sf, fn, scan: TaintScan,
+                    qual: str) -> list[Violation]:
+        out: list[Violation] = []
+        where = f"in hot path ({qual.split(':', 1)[1]})"
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = astutil.dotted_name(node.func) or ""
+                if isinstance(node.func, ast.Attribute):
+                    meth = node.func.attr
+                    if meth == "item" and scan.expr_tainted(node.func.value):
+                        out.append(self.violation(
+                            sf, node, f".item() forces a device→host "
+                            f"sync {where}"))
+                        continue
+                    if meth == "block_until_ready":
+                        out.append(self.violation(
+                            sf, node, f".block_until_ready() blocks the "
+                            f"dispatch pipeline {where}"))
+                        continue
+                if name in {"int", "float", "bool"} and node.args and \
+                        scan.expr_tainted(node.args[0]):
+                    out.append(self.violation(
+                        sf, node, f"{name}() coercion of a device value "
+                        f"forces a host sync {where}"))
+                    continue
+                if name in {"np.asarray", "np.array", "numpy.asarray",
+                            "numpy.array"} and node.args and \
+                        scan.expr_tainted(node.args[0]):
+                    out.append(self.violation(
+                        sf, node, f"{name}() of a device value forces a "
+                        f"device→host transfer {where}"))
+                    continue
+                if name == "jax.device_get":
+                    out.append(self.violation(
+                        sf, node, f"jax.device_get() transfers to host "
+                        f"{where}"))
+                    continue
+            elif isinstance(node, (ast.If, ast.While)):
+                test = node.test
+                if isinstance(test, ast.UnaryOp) and isinstance(
+                        test.op, ast.Not):
+                    test = test.operand
+                if isinstance(test, (ast.Name, ast.Attribute)) and \
+                        scan.expr_tainted(test):
+                    out.append(self.violation(
+                        sf, node, f"truth test of a device value "
+                        f"implicitly syncs {where}", line=test.lineno,
+                        col=test.col_offset))
+            elif isinstance(node, ast.Assert):
+                if scan.expr_tainted(node.test):
+                    out.append(self.violation(
+                        sf, node, f"assert on a device value implicitly "
+                        f"syncs {where}"))
+        return out
+
+
+register(HostSyncRule())

@@ -1,0 +1,177 @@
+"""Rule 3 — ``retrace-hazard``.
+
+Zero post-warmup retraces is the load-bearing invariant of PRs 2/5/8/9:
+one unplanned XLA compile costs ~180ms — more than an entire QoS window.
+Every compiled-shape knob in the repo is therefore quantized to
+power-of-two buckets through sanctioned helpers.  This rule flags the
+three ways fresh code reintroduces retraces:
+
+* a **K argument** to ``VersionCache.quantum``/``spec_quantum`` that is
+  not visibly bucketed — sanctioned forms are int literals, values
+  drawn from a ``*bucket*``-named collection (loop var, ``next(...)``
+  over it, subscript of it, ``min``/``max`` of sanctioned values), or a
+  call to ``_next_pow2``/``pages_for``;
+* a **mutable literal** (list/dict/set display) passed at a
+  ``static_argnums`` position of an immediately-invoked ``jax.jit`` —
+  unhashable statics raise at best and silently retrace at worst;
+* ``len(...)`` flowing into the **shape argument** of a ``jnp``
+  array constructor without a bucketing wrapper — per-request lengths
+  mean one compile per distinct length.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.base import AnalysisContext, Rule, Violation, register
+
+SANCTIONED_HELPERS = {"_next_pow2", "next_pow2", "pages_for"}
+_SHAPE_CTORS = {"zeros", "ones", "full", "empty", "arange", "broadcast_to"}
+
+
+def _bucketish(expr: ast.AST) -> bool:
+    """Does the expression mention a ``*bucket*``-named binding?"""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and "bucket" in node.id.lower():
+            return True
+        if isinstance(node, ast.Attribute) and "bucket" in node.attr.lower():
+            return True
+    return False
+
+
+def _helper_call(expr: ast.AST) -> bool:
+    if isinstance(expr, ast.Call):
+        name = astutil.dotted_name(expr.func) or ""
+        if name.split(".")[-1] in SANCTIONED_HELPERS:
+            return True
+    return False
+
+
+class _Sanction:
+    """Per-function set of names known to hold bucketed values."""
+
+    def __init__(self, fn: ast.AST):
+        self.names: set[str] = set()
+        for _ in range(2):      # two passes: alias-of-alias stabilizes
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) and len(
+                        node.targets) == 1 and isinstance(
+                        node.targets[0], ast.Name):
+                    if self.expr_ok(node.value):
+                        self.names.add(node.targets[0].id)
+                elif isinstance(node, ast.For) and isinstance(
+                        node.target, ast.Name):
+                    if _bucketish(node.iter):
+                        self.names.add(node.target.id)
+
+    def expr_ok(self, expr: ast.AST) -> bool:
+        if astutil.int_const(expr) is not None:
+            return True
+        if _helper_call(expr) or _bucketish(expr):
+            return True
+        if isinstance(expr, ast.Name):
+            return expr.id in self.names
+        if isinstance(expr, ast.Call):
+            name = astutil.dotted_name(expr.func) or ""
+            if name in {"min", "max"} and expr.args:
+                return all(self.expr_ok(a) or _bucketish(a)
+                           for a in expr.args)
+            if name == "next" and expr.args and _bucketish(expr.args[0]):
+                return True
+        if isinstance(expr, ast.Subscript):
+            return _bucketish(expr.value)
+        return False
+
+
+class RetraceRule(Rule):
+    rule_id = "retrace-hazard"
+    description = ("compiled-shape knobs must flow through pow2-bucket "
+                   "helpers; statics must be hashable")
+
+    def check(self, ctx: AnalysisContext) -> list[Violation]:
+        out: list[Violation] = []
+        for qual, info in sorted(ctx.graph.functions.items()):
+            sanction = _Sanction(info.node)
+            for node in ast.walk(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                out.extend(self._check_k_arg(info.sf, node, sanction))
+                out.extend(self._check_static_literal(info.sf, node))
+                out.extend(self._check_shape_len(info.sf, node))
+        return out
+
+    def _check_k_arg(self, sf, call: ast.Call,
+                     sanction: _Sanction) -> list[Violation]:
+        if not (isinstance(call.func, ast.Attribute)
+                and call.func.attr in {"quantum", "spec_quantum"}):
+            return []
+        if len(call.args) < 2 or isinstance(call.args[1], ast.Starred):
+            return []
+        k = call.args[1]
+        if sanction.expr_ok(k):
+            return []
+        src = ast.unparse(k) if hasattr(ast, "unparse") else "<expr>"
+        return [self.violation(
+            sf, k, f"K argument `{src}` to .{call.func.attr}() is not "
+            f"visibly bucketed (use a *_buckets collection or "
+            f"_next_pow2/pages_for) — every distinct value is a fresh "
+            f"trace + AOT compile")]
+
+    def _check_static_literal(self, sf, call: ast.Call) -> list[Violation]:
+        # jax.jit(f, static_argnums=(i,))(... mutable literal at i ...)
+        inner = call.func
+        if not isinstance(inner, ast.Call):
+            return []
+        name = astutil.dotted_name(inner.func) or ""
+        if name not in {"jax.jit", "jit", "functools.partial"}:
+            return []
+        positions: list[int] = []
+        for kw in inner.keywords:
+            if kw.arg == "static_argnums":
+                v = astutil.int_const(kw.value)
+                if v is not None:
+                    positions = [v]
+                else:
+                    tup = astutil.const_str_tuple(kw.value) or ()
+                    positions = [x for x in tup if isinstance(x, int)]
+        out = []
+        for p in positions:
+            if p < len(call.args) and isinstance(
+                    call.args[p], (ast.List, ast.Dict, ast.Set)):
+                out.append(self.violation(
+                    sf, call.args[p],
+                    f"mutable literal at static_argnums position {p}: "
+                    f"unhashable statics raise TypeError (or retrace "
+                    f"per call via id())"))
+        return out
+
+    def _check_shape_len(self, sf, call: ast.Call) -> list[Violation]:
+        name = astutil.dotted_name(call.func) or ""
+        parts = name.split(".")
+        if len(parts) < 2 or parts[-1] not in _SHAPE_CTORS or \
+                parts[0] not in {"jnp", "jax"}:
+            return []
+        if not call.args:
+            return []
+        out = []
+        # walk the shape arg, skipping sanctioned-helper subtrees
+        stack = [call.args[0]]
+        while stack:
+            node = stack.pop()
+            if _helper_call(node):
+                continue        # _next_pow2(len(x)) is the sanctioned form
+            if isinstance(node, ast.Call):
+                n = astutil.dotted_name(node.func) or ""
+                if n == "len":
+                    out.append(self.violation(
+                        sf, node, f"len() flows into a {name}() shape — "
+                        f"per-request lengths retrace per distinct value; "
+                        f"bucket with _next_pow2/pages_for"))
+                    continue
+            stack.extend(ast.iter_child_nodes(node))
+        return out
+
+    # fixture hook: violation() inherited
+
+
+register(RetraceRule())

@@ -1019,6 +1019,7 @@ class ServingEngine:
         else:
             self.cache = self._row_writer(self.cache, row_cache,
                                           jnp.int32(slot))
+        # veltair: ignore[host-sync-in-hot-path] the ONE sanctioned sync per (monolithic) admission: the prompt's first sampled token
         first = int(jnp.argmax(logits[0]))      # prompt's first sampled token
         self.host_syncs += 1
         self.tokens_decoded += 1
@@ -1109,6 +1110,7 @@ class ServingEngine:
             else:
                 self.cache = self._row_writer(self.cache, st.row_cache,
                                               jnp.int32(slot))
+            # veltair: ignore[host-sync-in-hot-path] the ONE sanctioned sync per admission (finishing chunk only)
             first = int(jnp.argmax(logits[0]))   # the ONE sync per admission
             # only the finishing chunk syncs, so only it yields a usable
             # wall time (intermediate chunks are async dispatches whose
@@ -1315,15 +1317,24 @@ class ServingEngine:
         land in ``handle.row_steps``."""
         if handle is None:
             return []
-        block = np.asarray(handle.block)     # ONE sync for the whole block
+        if handle.kind == "spec":
+            # ONE fused sync for the whole spec quantum: token block plus
+            # per-row emission/acceptance come back in a single
+            # device->host transfer instead of three serialized ones
+            # veltair: ignore[host-sync-in-hot-path] THE sanctioned per-quantum sync (spec path: fused triple)
+            block, emitted, accepted = jax.device_get(
+                (handle.block, handle.emitted, handle.accepted))
+            block = np.asarray(block)
+            emitted = np.asarray(emitted).astype(np.int32)
+            accepted = np.asarray(accepted)
+            # fold the actual per-row emission into n_left so every
+            # consumer below (and in the runtimes) sees real token counts
+            handle.n_left = emitted
+        else:
+            # veltair: ignore[host-sync-in-hot-path] THE sanctioned per-quantum sync (one block transfer per quantum, PR 4)
+            block = np.asarray(handle.block)
         self.host_syncs += 1
         if handle.kind == "spec":
-            # the block sync above already materialized the quantum; fold
-            # the actual per-row emission into n_left so every consumer
-            # below (and in the runtimes) sees real token counts
-            emitted = np.asarray(handle.emitted).astype(np.int32)
-            accepted = np.asarray(handle.accepted)
-            handle.n_left = emitted
             d = handle.drafted
             for i in handle.active:
                 self.tokens_accepted += max(int(emitted[i]) - 1, 0)

@@ -48,6 +48,7 @@ after :meth:`ServingEngine.warmup` leaves it unchanged.
 from __future__ import annotations
 
 import dataclasses
+import operator
 from typing import Any, Callable
 
 import jax
@@ -60,6 +61,45 @@ def tiles_key(tiles: dict[str, dict]) -> tuple:
     """Canonical hashable key for an op -> tiling-kwargs table."""
     return tuple(sorted(
         (op, tuple(sorted(kw.items()))) for op, kw in tiles.items()))
+
+
+class StaticArgError(TypeError):
+    """A static compile-key argument (K-bucket, draft depth) is not a
+    hashable integer from the sanctioned bucket space.  Raised eagerly
+    at the :class:`VersionCache` boundary: an unhashable or unbucketed
+    key would otherwise silently trace + AOT-compile a fresh executable
+    per distinct value — the exact retrace hazard the static analyzer's
+    ``retrace-hazard`` rule guards at the call sites."""
+
+
+def _static_int(name: str, v: Any, minimum: int = 1) -> int:
+    """Validate a static compile key: a plain integer (no bools, no
+    floats, nothing unhashable) of at least ``minimum``."""
+    if isinstance(v, bool):
+        raise StaticArgError(
+            f"{name} must be a plain int compile key, got bool {v!r}")
+    try:
+        i = operator.index(v)
+    except TypeError:
+        raise StaticArgError(
+            f"{name} must be a hashable int compile key, got "
+            f"{type(v).__name__} {v!r} — a non-int key would trace a "
+            f"fresh executable per call") from None
+    if i < minimum:
+        raise StaticArgError(f"{name}={i} must be >= {minimum}")
+    return i
+
+
+def _pow2_bucket(name: str, v: Any) -> int:
+    """Validate a K-bucket key: a power-of-two ``_static_int``."""
+    i = _static_int(name, v)
+    if i & (i - 1):
+        raise StaticArgError(
+            f"{name}={i} is not a power-of-two bucket — every distinct "
+            f"unbucketed value compiles its own executable (the "
+            f"zero-post-warmup-retrace contract); round up via "
+            f"_next_pow2 or pick from the engine's quantum_buckets")
+    return i
 
 
 @dataclasses.dataclass
@@ -171,8 +211,12 @@ class VersionCache:
         executable is AOT-lowered and compiled against abstract shapes —
         warmup can pre-build every bucket without executing a single
         decode step — and donates the cache argument, so each of the K
-        on-device steps updates the KV/SSM state in place."""
-        k = int(k)
+        on-device steps updates the KV/SSM state in place.
+
+        Raises :class:`StaticArgError` when ``k`` is not a hashable
+        power-of-two int (unbucketed keys would silently compile one
+        executable per distinct value)."""
+        k = _pow2_bucket("k", k)
         fn = entry.quanta.get(k)
         if fn is not None:
             self.hits += 1
@@ -206,8 +250,11 @@ class VersionCache:
 
         ``k`` statically caps the per-row emission budget (a spec
         quantum emits at most ``min(k, d+1)`` tokens per row); ``d`` is
-        the static draft depth that fixes the (B, d+1) verify shape."""
-        k, d = int(k), int(d)
+        the static draft depth that fixes the (B, d+1) verify shape.
+
+        Raises :class:`StaticArgError` for a non-pow2/unhashable ``k``
+        or a non-int ``d`` (see :meth:`quantum`)."""
+        k, d = _pow2_bucket("k", k), _static_int("d", d)
         fn = entry.spec.get((k, d))
         if fn is not None:
             self.hits += 1

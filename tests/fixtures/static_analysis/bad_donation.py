@@ -1,0 +1,28 @@
+"""Known-bad fixture: reads of a buffer after it was donated."""
+import jax
+import jax.numpy as jnp
+
+
+def _writer():
+    def write(cache, row):
+        return cache.at[0].set(row)
+    return jax.jit(write, donate_argnums=(0,))
+
+
+class Engine:
+    def __init__(self):
+        self._row_writer = _writer()
+        self.cache = jnp.zeros((4, 4))
+
+    def admit(self, row):
+        new_cache = self._row_writer(self.cache, row)
+        stale = self.cache.sum()          # BAD: self.cache was donated
+        self.cache = new_cache
+        return stale
+
+
+def direct():
+    step = jax.jit(lambda c: c + 1, donate_argnums=(0,))
+    cache = jnp.zeros((8,))
+    out = step(cache)
+    return cache + out                    # BAD: cache was donated

@@ -1,0 +1,26 @@
+"""Known-bad fixture: host syncs inside the quantum hot path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class QuantumHandle:
+    block: jax.Array
+
+
+class ServingEngine:
+    def begin_quantum(self, k):
+        logits = jnp.zeros((4, 4))
+        tok = int(jnp.argmax(logits[0]))          # BAD: int() coercion
+        probe = logits.max().item()               # BAD: .item()
+        if logits:                                # BAD: implicit truth sync
+            pass
+        return self.helper(logits), tok, probe
+
+    def helper(self, logits: jax.Array):
+        # reached from begin_quantum -> still hot path
+        return np.asarray(logits)                 # BAD: np.asarray transfer
+
+    def finish_quantum(self, handle: QuantumHandle):
+        handle.block.block_until_ready()          # BAD: pipeline stall
+        return jax.device_get(handle.block)       # BAD: device_get

@@ -1,0 +1,24 @@
+"""Known-bad fixture: a new cache family whose "seq"-axis specs never
+flow through Model.cache_specs — paging can't see its leaves."""
+
+
+class ParamSpec:
+    def __init__(self, shape, dtype=None, axes=(), init=None):
+        self.shape, self.axes = shape, axes
+
+
+def _attn_cache_specs(batch, t_max):
+    return {"k": ParamSpec((batch, t_max, 4), None,
+                           ("batch", "seq", "head_dim"))}
+
+
+def orphan_cache_specs(batch, t_max):
+    # BAD: "seq"-axis cache leaves, but nothing in Model.cache_specs
+    # dispatches here -> paged_leaf_paths never includes them
+    return {"x": ParamSpec((batch, t_max, 8), None,
+                           ("batch", "seq", "inner"))}
+
+
+class Model:
+    def cache_specs(self, batch, t_max):
+        return _attn_cache_specs(batch, t_max)

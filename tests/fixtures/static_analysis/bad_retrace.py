@@ -1,0 +1,13 @@
+"""Known-bad fixture: unbucketed shapes / unhashable statics retrace."""
+import jax
+import jax.numpy as jnp
+
+
+def serve(cache, entry, prompt, steps):
+    # BAD: raw step count -> one AOT compile per distinct value
+    fn = cache.quantum(entry, steps, None, None, 1)
+    # BAD: per-request length -> one trace per distinct prompt length
+    pad = jnp.zeros((len(prompt), 4))
+    # BAD: mutable literal at a static position
+    out = jax.jit(lambda x, cfg: x, static_argnums=(1,))(pad, [1, 2, 3])
+    return fn, out

@@ -1,0 +1,3 @@
+"""Known-bad fixture: does not parse (rule 0 replaces compileall)."""
+def broken(:
+    return

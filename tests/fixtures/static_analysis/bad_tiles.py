@@ -1,0 +1,13 @@
+"""Known-bad fixture: non-atomic mutations of dispatch override state."""
+from repro.kernels import dispatch
+from repro.kernels.dispatch import _TILE_OVERRIDES, set_tile_overrides
+
+
+def apply_level(level):
+    # BAD: per-op install — N calls leave N-1 torn intermediate states
+    set_tile_overrides("matmul", bm=256)
+    dispatch.set_tile_overrides("attention", bq=128)
+    # BAD: direct pokes at the shared table
+    _TILE_OVERRIDES["flash"] = {"bq": 64}
+    _TILE_OVERRIDES.clear()
+    dispatch._LADDER = [level]

@@ -1,0 +1,29 @@
+"""Known-good fixture: the repo's donation idiom — rebind the donated
+binding in the same statement, never touch the old handle again."""
+import jax
+import jax.numpy as jnp
+
+
+def _writer():
+    def write(cache, row):
+        return cache.at[0].set(row)
+    return jax.jit(write, donate_argnums=(0,))
+
+
+class Engine:
+    def __init__(self):
+        self._row_writer = _writer()
+        self.cache = jnp.zeros((4, 4))
+
+    def admit(self, row):
+        # same-statement rebind: the donated binding is replaced by the
+        # result before anything can read it
+        self.cache = self._row_writer(self.cache, row)
+        return self.cache.shape
+
+
+def direct():
+    step = jax.jit(lambda c: c + 1, donate_argnums=(0,))
+    cache = jnp.zeros((8,))
+    cache = step(cache)
+    return cache

@@ -1,0 +1,36 @@
+"""Known-good fixture: every "seq"-axis cache family is wired into the
+Model.cache_specs dispatch (and paged_cache_specs calls back into it)."""
+
+
+class ParamSpec:
+    def __init__(self, shape, dtype=None, axes=(), init=None):
+        self.shape, self.axes = shape, axes
+
+
+def _attn_cache_specs(batch, t_max):
+    return {"k": ParamSpec((batch, t_max, 4), None,
+                           ("batch", "seq", "head_dim"))}
+
+
+def _mla_cache_specs(batch, t_max):
+    return {"c_kv": ParamSpec((batch, t_max, 8), None,
+                              ("batch", "seq", "kv_lora"))}
+
+
+def window_cache_specs(batch, w):
+    # ring-buffer window cache: no "seq" axis, intentionally unpaged,
+    # but still wired into the dispatch below
+    return {"k": ParamSpec((batch, w, 4), None,
+                           ("batch", "window", "head_dim"))}
+
+
+class Model:
+    def cache_specs(self, batch, t_max):
+        specs = _attn_cache_specs(batch, t_max)
+        specs.update(_mla_cache_specs(batch, t_max))
+        specs.update(window_cache_specs(batch, 16))
+        return specs
+
+    def paged_cache_specs(self, batch, t_max):
+        # calls INTO the anchor: connected, not reachable-from — fine
+        return self.cache_specs(batch, t_max)

@@ -1,0 +1,26 @@
+"""Known-good fixture: every compiled-shape knob is visibly bucketed."""
+import jax.numpy as jnp
+
+QUANTUM_BUCKETS = (1, 2, 4, 8, 16)
+
+
+def _next_pow2(n):
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def serve(cache, entry, prompt, steps):
+    bucket = next(b for b in QUANTUM_BUCKETS if b >= steps)
+    fn = cache.quantum(entry, bucket, None, None, 1)        # bucketed
+    top = cache.spec_quantum(entry, QUANTUM_BUCKETS[-1], 2,
+                             None, None, 1)                 # bucket subscript
+    lit = cache.quantum(entry, 4, None, None, 1)            # int literal
+    pad = jnp.zeros((_next_pow2(len(prompt)), 4))           # sanctioned helper
+    return fn, top, lit, pad
+
+
+def warm(cache, entry, buckets):
+    for k in buckets:                 # loop over a *bucket* collection
+        cache.quantum(entry, k, None, None, 1)

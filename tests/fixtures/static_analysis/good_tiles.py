@@ -1,0 +1,12 @@
+"""Known-good fixture: override state changes only through the atomic
+whole-table installers (or a scoped context)."""
+from repro.kernels import dispatch
+
+
+def apply_level(level, tiles):
+    dispatch.install_tile_overrides(
+        {"matmul": {"bm": 256}, "attention": {"bq": 128}})
+    dispatch.install_ladder([tiles])
+    with dispatch.tile_context({"matmul": {"bm": 128}}):
+        pass
+    dispatch.clear_tile_overrides()

@@ -1,0 +1,205 @@
+"""Tests for repro.analysis — the static invariant checker CI gate.
+
+Per rule: one known-bad fixture that must produce violations, one
+known-good fixture that must come back clean, and a suppression pass
+(the bad fixture with ``# veltair: ignore[...]`` comments injected must
+come back clean-but-suppressed).  Plus: the CLI contract (nonzero exit
+on bad fixtures, ``--json`` records), the whole-repo clean run the CI
+gate depends on, and the typed ``StaticArgError`` boundary check at
+``VersionCache.quantum``/``spec_quantum`` that complements the
+``retrace-hazard`` rule dynamically.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FIXTURES = ROOT / "tests" / "fixtures" / "static_analysis"
+CLI = ROOT / "tools" / "check_static.py"
+
+from repro.analysis import all_rules, run  # noqa: E402
+from repro.serving.version_cache import (  # noqa: E402
+    StaticArgError, VersionCache)
+
+RULE_FIXTURES = {
+    "host-sync-in-hot-path": "hotpath",
+    "use-after-donation": "donation",
+    "retrace-hazard": "retrace",
+    "paged-leaf-coverage": "paging",
+    "tile-table-atomicity": "tiles",
+}
+
+
+def run_on(*paths, rules=None):
+    return run([str(p) for p in paths], rules)
+
+
+def hits(report, rule_id):
+    return [v for v in report.violations if v.rule_id == rule_id]
+
+
+# ---------------------------------------------------------------------------
+# rule corpus
+# ---------------------------------------------------------------------------
+def test_rule_catalog_complete():
+    ids = set(all_rules())
+    assert ids == {"syntax", "host-sync-in-hot-path", "use-after-donation",
+                   "retrace-hazard", "paged-leaf-coverage",
+                   "tile-table-atomicity"}
+
+
+@pytest.mark.parametrize("rule_id,stem", sorted(RULE_FIXTURES.items()))
+def test_bad_fixture_flags(rule_id, stem):
+    report = run_on(FIXTURES / f"bad_{stem}.py")
+    assert hits(report, rule_id), \
+        f"bad_{stem}.py should violate {rule_id}"
+    # and only that rule fires: fixtures are single-hazard by design
+    assert {v.rule_id for v in report.violations} == {rule_id}
+
+
+@pytest.mark.parametrize("rule_id,stem", sorted(RULE_FIXTURES.items()))
+def test_good_fixture_clean(rule_id, stem):
+    report = run_on(FIXTURES / f"good_{stem}.py")
+    assert report.ok, [v.format() for v in report.violations]
+
+
+@pytest.mark.parametrize("rule_id,stem", sorted(RULE_FIXTURES.items()))
+def test_bad_fixture_suppressible(rule_id, stem, tmp_path):
+    """Injecting a justified ignore comment above every violation line
+    turns the bad fixture into a clean (but counted-suppressed) run."""
+    src = (FIXTURES / f"bad_{stem}.py").read_text()
+    report = run_on(FIXTURES / f"bad_{stem}.py")
+    lines = src.splitlines()
+    for ln in sorted({v.line for v in report.violations}, reverse=True):
+        indent = len(lines[ln - 1]) - len(lines[ln - 1].lstrip())
+        lines.insert(ln - 1, " " * indent
+                     + f"# veltair: ignore[{rule_id}] fixture test")
+    target = tmp_path / f"bad_{stem}.py"
+    target.write_text("\n".join(lines) + "\n")
+    suppressed = run_on(target)
+    assert suppressed.ok, [v.format() for v in suppressed.violations]
+    assert len(suppressed.suppressed) == len(report.violations)
+    assert all(v.justified for v in suppressed.suppressed)
+
+
+def test_syntax_rule_flags_and_resists_suppression(tmp_path):
+    report = run_on(FIXTURES / "bad_syntax.py")
+    assert hits(report, "syntax")
+    # an unparseable file cannot argue its way out via comments
+    bad = tmp_path / "still_bad.py"
+    bad.write_text("# veltair: ignore[syntax] nope\ndef broken(:\n")
+    assert not run_on(bad).ok
+
+
+def test_good_hotpath_suppression_is_counted_and_justified():
+    report = run_on(FIXTURES / "good_hotpath.py")
+    assert report.ok
+    assert len(report.suppressed) == 1
+    v = report.suppressed[0]
+    assert v.rule_id == "host-sync-in-hot-path" and v.justified
+
+
+def test_unjustified_suppression_detected(tmp_path):
+    f = tmp_path / "m.py"
+    f.write_text(
+        "import jax.numpy as jnp\n"
+        "class ServingEngine:\n"
+        "    def begin_quantum(self, k):\n"
+        "        x = jnp.zeros((2,))\n"
+        "        return int(x.sum())  # veltair: ignore[host-sync-in-hot-path]\n")
+    report = run_on(f)
+    assert report.ok and len(report.suppressed) == 1
+    assert not report.suppressed[0].justified
+
+
+# ---------------------------------------------------------------------------
+# whole-repo gate
+# ---------------------------------------------------------------------------
+def test_repo_src_is_clean():
+    report = run_on(ROOT / "src")
+    assert report.ok, "\n".join(v.format() for v in report.violations)
+    # every live suppression in src/ must carry a justification
+    assert all(v.justified for v in report.suppressed), \
+        [v.format() for v in report.suppressed if not v.justified]
+
+
+@pytest.mark.slow
+def test_repo_wide_sweep_is_clean():
+    report = run_on(ROOT / "src", ROOT / "examples", ROOT / "benchmarks",
+                    ROOT / "tools")
+    assert report.ok, "\n".join(v.format() for v in report.violations)
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+def _cli(*args):
+    return subprocess.run([sys.executable, str(CLI), *args],
+                          capture_output=True, text=True, cwd=ROOT)
+
+
+@pytest.mark.parametrize("stem", sorted(RULE_FIXTURES.values()) + ["syntax"])
+def test_cli_exits_nonzero_on_bad_fixture(stem):
+    proc = _cli(str(FIXTURES / f"bad_{stem}.py"))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+
+
+def test_cli_exit_zero_on_good_fixture_and_json_records():
+    proc = _cli("--json", str(FIXTURES / f"bad_retrace.py"))
+    assert proc.returncode == 1
+    data = json.loads(proc.stdout)
+    assert data["ok"] is False and data["violations"]
+    rec = data["violations"][0]
+    assert {"file", "line", "col", "rule", "message"} <= set(rec)
+    assert rec["rule"] == "retrace-hazard"
+
+    proc = _cli("--json", str(FIXTURES / "good_retrace.py"))
+    assert proc.returncode == 0
+    assert json.loads(proc.stdout)["ok"] is True
+
+
+def test_cli_rules_filter_and_listing():
+    proc = _cli("--list-rules")
+    assert proc.returncode == 0
+    assert "host-sync-in-hot-path" in proc.stdout
+    # rule filter: only syntax runs -> retrace fixture passes
+    proc = _cli("--rules", "syntax", str(FIXTURES / "bad_retrace.py"))
+    assert proc.returncode == 0
+    proc = _cli("--rules", "no-such-rule", str(FIXTURES / "bad_retrace.py"))
+    assert proc.returncode == 2
+    assert "unknown rule" in proc.stderr
+
+
+def test_cli_missing_path_is_one_line_error():
+    proc = _cli("definitely/not/a/path")
+    assert proc.returncode == 2
+    assert "no such path" in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# K-bucket static-arg hashability at the VersionCache boundary (rule 3's
+# dynamic complement): typed error instead of a silent per-value retrace
+# ---------------------------------------------------------------------------
+def test_version_cache_rejects_bad_static_keys():
+    vc = VersionCache(model=None)   # validation fires before any build
+    with pytest.raises(StaticArgError):
+        vc.quantum(None, [4], None, None, 1)        # unhashable
+    with pytest.raises(StaticArgError):
+        vc.quantum(None, 3, None, None, 1)          # non-pow2
+    with pytest.raises(StaticArgError):
+        vc.quantum(None, True, None, None, 1)       # bool masquerading
+    with pytest.raises(StaticArgError):
+        vc.quantum(None, 4.0, None, None, 1)        # float key
+    with pytest.raises(StaticArgError):
+        vc.quantum(None, 0, None, None, 1)          # below minimum
+    with pytest.raises(StaticArgError):
+        vc.spec_quantum(None, 6, 2, None, None, 1)  # non-pow2 k
+    with pytest.raises(StaticArgError):
+        vc.spec_quantum(None, 4, 0, None, None, 1)  # depth < 1
+    # the typed error is still a TypeError for generic callers
+    assert issubclass(StaticArgError, TypeError)

@@ -87,11 +87,24 @@ SPEC_GAIN_MIN = 1.3
 SPEC_ADVERSARIAL_MIN = 0.95
 
 
+RERUN = "rerun `python -m benchmarks.bench_online_serving --tiny`"
+
+
+def load(path: pathlib.Path) -> dict | None:
+    """Parse the bench JSON, or None (the caller already errored)."""
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
 def check(path: pathlib.Path) -> list[str]:
     if not path.exists():
-        return [f"{path} missing — run "
+        return [f"{path.name} missing — run "
                 "`python -m benchmarks.bench_online_serving --tiny` first"]
-    data = json.loads(path.read_text())
+    data = load(path)
+    if data is None or not isinstance(data, dict):
+        return [f"{path.name} is not valid JSON — {RERUN}"]
     q = data.get("quantum")
     if not q or "fused" not in q or "per_step" not in q:
         return [f"{path} has no quantum section (stale file?)"]
@@ -325,12 +338,29 @@ def check_paged(p: dict | None) -> list[str]:
 
 def main() -> int:
     path = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT
-    errors = check(path)
+    try:
+        errors = check(path)
+    except (KeyError, TypeError) as e:
+        # a stale file from an older bench schema: name the missing key
+        # in one line instead of dumping a traceback
+        print(f"check_bench: FAIL: {path.name} is stale — missing/"
+              f"malformed key {e.args[0]!r}; {RERUN}", file=sys.stderr)
+        return 1
     for e in errors:
         print("BENCH REGRESSION:", e)
     if errors:
         return 1
-    data = json.loads(path.read_text())
+    data = load(path)
+    try:
+        return summarize(data)
+    except (KeyError, TypeError) as e:
+        print(f"check_bench: FAIL: {path.name} is stale — missing/"
+              f"malformed key {e.args[0]!r} in the summary sections; "
+              f"{RERUN}", file=sys.stderr)
+        return 1
+
+
+def summarize(data: dict) -> int:
     print(f"bench gate: fused dispatch wins "
           f"({data['quantum']['speedup_tokens_per_s']}x tokens/s, "
           f"{data['quantum']['fused']['tokens_per_sync']} tokens/sync)")

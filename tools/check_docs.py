@@ -18,6 +18,15 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 DOCS = [ROOT / "docs" / "ARCHITECTURE.md", ROOT / "README.md"]
 
+# Sections a doc must carry to count as current: a doc that imports
+# cleanly but lost (or predates) one of these is stale, and the gate
+# names the missing section in one line instead of silently passing.
+REQUIRED_SECTIONS = {
+    "ARCHITECTURE.md": ("## 1. Paper-to-code map",
+                        "## 11. Static invariant checking"),
+    "README.md": ("## Correctness gates",),
+}
+
 # `repro.pkg.mod` or `repro.pkg.mod:Symbol` inside backticks
 REF = re.compile(r"`(repro(?:\.[A-Za-z0-9_]+)+)(?::([A-Za-z0-9_]+))?`")
 
@@ -56,13 +65,23 @@ def check(path: pathlib.Path) -> list[str]:
     return errors
 
 
+def check_sections(path: pathlib.Path) -> list[str]:
+    text = path.read_text()
+    return [f"{path.name}: missing required section {h!r} — the doc is "
+            f"stale (update it alongside the code it maps)"
+            for h in REQUIRED_SECTIONS.get(path.name, ())
+            if h not in text]
+
+
 def main() -> int:
     missing = [d for d in DOCS if not d.exists()]
     if missing:
         for d in missing:
-            print(f"MISSING doc file: {d}")
+            print(f"check_docs: FAIL: required doc file is absent: "
+                  f"{d.relative_to(ROOT)}", file=sys.stderr)
         return 1
     errors = [e for d in DOCS for e in check(d)]
+    errors += [e for d in DOCS for e in check_sections(d)]
     for e in errors:
         print("BROKEN:", e)
     if errors:

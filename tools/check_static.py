@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""CI gate: static invariant checking over the serving hot path.
+
+Runs the ``repro.analysis`` rule corpus (host-sync, donation, retrace,
+paged-leaf, tile-atomicity, syntax) over the given paths and exits
+nonzero on any active violation.  Suppress a finding in place with
+``# veltair: ignore[rule-id] justification``.
+
+Usage::
+
+    python tools/check_static.py src                 # the CI gate
+    python tools/check_static.py src examples tools  # wider sweep
+    python tools/check_static.py --json src          # machine-readable
+    python tools/check_static.py --rules syntax src  # a subset
+    python tools/check_static.py --list-rules
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import all_rules, run  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="VELTAIR static invariant checker")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files or directories to scan (default: src)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit per-violation JSON records to stdout")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, rule in sorted(all_rules().items()):
+            print(f"{rid:24s} {rule.description}")
+        return 0
+
+    paths = args.paths or [str(ROOT / "src")]
+    missing = [p for p in paths if not pathlib.Path(p).exists()]
+    if missing:
+        print(f"check_static: FAIL: no such path: {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+    rule_ids = ([r.strip() for r in args.rules.split(",") if r.strip()]
+                if args.rules else None)
+    try:
+        report = run(paths, rule_ids)
+    except KeyError as e:
+        print(f"check_static: FAIL: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    if args.json:
+        print(report.to_json())
+    else:
+        for v in report.violations:
+            print(v.format())
+        for v in report.suppressed:
+            if not v.justified:
+                print(f"note: {v.format()} — suppression has no "
+                      f"justification text")
+        print(report.summary())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
